@@ -1,0 +1,56 @@
+"""Appendix C: the prefetch-budget model — t1+t2 curve and the optimum.
+
+Empirically builds r_miss(b) by sweeping budgets on the bench index, then
+checks Appendix C's conclusion: on realistic link speeds the optimum sits
+at b* = B·t̄_LLM (case 1), not at an interior case-2 point.
+"""
+
+import numpy as np
+
+import repro.core as core
+from repro.configs import get_arch
+from repro.serving import calibration_windows
+from benchmarks.common import (NPROBE, bench_index, bench_queries, emit,
+                               make_engine, paper_scale_tcc, write_csv)
+
+
+def run(pipeline: str = "hyde", n_queries: int = 16):
+    idx = bench_index()
+    total = float(idx.paged.all_cluster_bytes().sum())
+    budgets = [total * f for f in (0.02, 0.05, 0.1, 0.2, 0.4, 0.7)]
+    hit_rates = []
+    for b in budgets:
+        eng = make_engine(budget_bytes=int(b), buffer_pages=4096)
+        q = bench_queries(n_queries, seed=81)
+        eng.lookahead(q, gen_tokens=[128] * n_queries)
+        q_out = core.synthetic_rewrite(q, core.PIPELINE_SIGMA[pipeline],
+                                       np.random.default_rng(82))
+        res = eng.retrieve(q_out)
+        hit_rates.append(res.hit_rate)
+
+    miss_fn = core.empirical_miss_curve(budgets, hit_rates)
+    hw = core.TPU_V5E
+    t_cc = paper_scale_tcc(hw)
+    wins = calibration_windows(pipeline, 64)
+    cfg = get_arch("llama3-8b")
+    t_llm = core.generation_window_seconds(cfg, hw, gen_tokens=wins, batch=1,
+                                           chips=4)
+    b_case1 = core.case1_budget(t_llm, hw.host_link_bw)
+    b_case2 = core.case2_budget(miss_fn, link_bw=hw.host_link_bw,
+                                nprobe=NPROBE, t_cc=t_cc, b_max=total)
+    rows = [{"budget_frac": round(b / total, 3),
+             "hit_rate": round(h, 4),
+             "t_total_ms": round((max(t_llm, b / hw.host_link_bw)
+                                  + miss_fn(b) * NPROBE * t_cc) * 1e3, 3)}
+            for b, h in zip(budgets, hit_rates)]
+    write_csv("appC_budget", rows)
+    emit("budget/case1", t_llm * 1e6,
+         f"b1_frac={b_case1/total:.3f};case2={'none' if b_case2 is None else round(b_case2/total,3)}")
+    # hit rate must be monotone in budget
+    assert all(a <= b + 0.02 for a, b in zip(hit_rates, hit_rates[1:])), \
+        hit_rates
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,92 @@
+"""Fig. 9: single-query end-to-end latency — TeleRAG vs CPU-offload.
+
+Hit rates / cluster sets are MEASURED by the engine on the bench index;
+wall-clock is MODELED at paper datastore scale (61 GB/4096 clusters) on
+the v5e profile via the §4.1/App-C composition. Both numbers per pipeline
+(paper reports 1.2–2.1× on RTX4090; regime differs but the mechanism —
+overlap + hybrid split — is identical).
+"""
+
+import time
+
+import numpy as np
+
+import repro.core as core
+from repro.serving import PipelineExecutor, make_traces
+from benchmarks.common import (NPROBE, PAPER_CLUSTER_BYTES, bench_index,
+                               bench_queries, emit, make_engine,
+                               paper_scale_tcc, write_csv)
+
+PAPER_4090_3B = {"hyde": 1.3, "subq": 1.85, "iter": 1.4, "irg": 2.11,
+                 "flare": 1.5, "self_rag": 1.35}
+
+
+PAPER_NPROBE = 256
+
+
+def modeled_latency(result, eng, mode: str) -> float:
+    """Recompose round telemetry at paper scale.
+
+    Measured hit/miss *rates* transfer; absolute cluster counts scale by
+    PAPER_NPROBE / bench nprobe (the bench index probes 64 = 4*sqrt(256)
+    clusters, the paper probes 256 = 4*sqrt(4096)), and cluster bytes
+    scale to the paper's 61 GB / 4096 = 15 MB clusters.
+    """
+    t_cc = paper_scale_tcc(eng.cfg.hw)
+    link = eng.cfg.hw.host_link_bw
+    scale = PAPER_NPROBE / max(eng.cfg.nprobe, 1)
+    total = 0.0
+    for rt in result.rounds:
+        # rescale byte-dependent terms to paper cluster count and size
+        n_pref_clusters = (rt.bytes_prefetched / max(
+            np.mean(eng.index.paged.all_cluster_bytes()), 1)) * scale
+        t_prefetch = n_pref_clusters * PAPER_CLUSTER_BYTES / link
+        hits, misses = rt.hits * scale, rt.misses * scale
+        t_host = misses * t_cc
+        t_dev = (hits * PAPER_CLUSTER_BYTES
+                 / (eng.cfg.hw.hbm_bw * eng.cfg.chips))
+        if mode == "telerag":
+            total += max(rt.t_llm_window, t_prefetch)
+            total += max(t_host, t_dev) + rt.t_merge
+        elif mode == "cpu_baseline":
+            total += rt.t_llm_window + (hits + misses) * t_cc
+        elif mode == "runtime_fetch":
+            nb = (hits + misses) * PAPER_CLUSTER_BYTES
+            total += rt.t_llm_window + nb / link + t_dev + rt.t_merge
+        elif mode == "gpu_resident":  # datastore fully in HBM (infeasible)
+            total += rt.t_llm_window + (hits + misses) * PAPER_CLUSTER_BYTES \
+                / (eng.cfg.hw.hbm_bw * eng.cfg.chips)
+    return total
+
+
+def run(n_queries: int = 16):
+    rows = []
+    for pipe in core.PIPELINE_SIGMA:
+        eng = make_engine(buffer_pages=1024)
+        ex = PipelineExecutor(eng)
+        q = bench_queries(n_queries, seed=21)
+        traces = make_traces(pipe, n_queries, seed=22)
+        t0 = time.time()
+        res = ex.execute_batch(q, traces)
+        wall = (time.time() - t0) * 1e6 / n_queries
+        tele = np.mean([modeled_latency(r, eng, "telerag") for r in res])
+        cpu = np.mean([modeled_latency(r, eng, "cpu_baseline") for r in res])
+        fetch = np.mean([modeled_latency(r, eng, "runtime_fetch")
+                         for r in res])
+        rows.append({
+            "pipeline": pipe,
+            "telerag_ms": round(tele * 1e3, 2),
+            "cpu_baseline_ms": round(cpu * 1e3, 2),
+            "runtime_fetch_ms": round(fetch * 1e3, 2),
+            "speedup_vs_cpu": round(cpu / max(tele, 1e-12), 3),
+            "speedup_vs_fetch": round(fetch / max(tele, 1e-12), 3),
+            "paper_4090_speedup": PAPER_4090_3B[pipe],
+        })
+        emit(f"latency/{pipe}", wall,
+             f"speedup={rows[-1]['speedup_vs_cpu']};paper~{PAPER_4090_3B[pipe]}")
+    write_csv("fig9_latency", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

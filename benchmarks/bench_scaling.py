@@ -1,0 +1,76 @@
+"""Fig. 11/13: multi-replica scaling and the cache ablation.
+
+Scheduling quality and cache hit rates are MEASURED; per-replica latency
+is modeled and the slowest replica bounds the batch (the paper's
+"long tail of higher-latency micro-batches" shows up the same way).
+"""
+
+import time
+
+import numpy as np
+
+from repro.serving import MultiReplicaOrchestrator, make_traces
+from repro.configs import get_arch
+from repro.serving import EngineConfig
+from benchmarks.common import (NPROBE, N_CLUSTERS, bench_index, bench_queries,
+                               emit, write_csv)
+from benchmarks.bench_latency import modeled_latency
+
+
+def _orch(n, cache):
+    cfg = EngineConfig(nprobe=NPROBE, top_k=3, buffer_pages=768,
+                       lookahead_rank=min(2 * NPROBE, N_CLUSTERS),
+                       kernel_mode="ref", cache_enabled=cache, chips=4)
+    return MultiReplicaOrchestrator(bench_index(), cfg, n,
+                                    get_arch("llama3-8b"))
+
+
+def run(replica_counts=(1, 2, 4, 8), global_batch: int = 32,
+        micro_batch: int = 4, pipeline: str = "hyde"):
+    rows = []
+    base_qps = None
+    for cache in (False, True):
+        for n in replica_counts:
+            orch = _orch(n, cache)
+            q = bench_queries(global_batch, seed=41)
+            traces = make_traces(pipeline, global_batch, seed=42)
+            # warm round for the cache (paper uses 512 warm queries)
+            if cache:
+                orch.run_global_batch(q, traces, micro_batch=micro_batch)
+            t0 = time.time()
+            rep = orch.run_global_batch(
+                bench_queries(global_batch, seed=43),
+                make_traces(pipeline, global_batch, seed=44),
+                micro_batch=micro_batch)
+            wall = time.time() - t0
+            # modeled: replicas run their micro-batches serially; the batch
+            # completes when the slowest replica finishes
+            per_replica = {}
+            for rid, results in rep.per_replica_results.items():
+                eng = orch.replicas[rid]
+                per_replica[rid] = sum(modeled_latency(r, eng, "telerag")
+                                       for r in results) / micro_batch
+            lat = max(per_replica.values()) + rep.schedule_overhead_s
+            qps = global_batch / lat
+            if not cache and n == replica_counts[0]:
+                base_qps = qps
+            hits = sum(rt.hits for r in rep.all_results() for rt in r.rounds)
+            miss = sum(rt.misses for r in rep.all_results()
+                       for rt in r.rounds)
+            rows.append({
+                "replicas": n, "cache": cache,
+                "qps": round(qps, 3),
+                "scaling_vs_1": round(qps / base_qps, 3),
+                "hit_rate": round(hits / max(hits + miss, 1), 4),
+                "sched_overhead_ms": round(rep.schedule_overhead_s * 1e3, 2),
+                "wall_s": round(wall, 2),
+            })
+            emit(f"scaling/{'cache' if cache else 'nocache'}/r{n}",
+                 lat * 1e6 / global_batch,
+                 f"qps={rows[-1]['qps']};scale={rows[-1]['scaling_vs_1']}")
+    write_csv("fig11_13_scaling", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

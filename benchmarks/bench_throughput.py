@@ -1,0 +1,60 @@
+"""Fig. 10/12: batched throughput + per-stage latency breakdown.
+
+Paper: TeleRAG's advantage GROWS with batch (1.32x -> 1.98x at batch 8 on
+H100/Llama-8B) because CPU retrieval scales linearly with batch while the
+hybrid path amortizes. Same composition here with measured hit rates.
+"""
+
+import time
+
+import numpy as np
+
+import repro.core as core
+from repro.serving import PipelineExecutor, make_traces
+from benchmarks.common import (bench_index, bench_queries, emit, make_engine,
+                               paper_scale_tcc, write_csv)
+from benchmarks.bench_latency import modeled_latency, PAPER_CLUSTER_BYTES
+
+
+def run(batches=(1, 2, 4, 8), pipelines=("hyde", "subq", "irg")):
+    rows = []
+    for pipe in pipelines:
+        for bs in batches:
+            eng = make_engine(buffer_pages=1024)
+            ex = PipelineExecutor(eng)
+            res = ex.execute_batch(bench_queries(bs, seed=31),
+                                   make_traces(pipe, bs, seed=32))
+            tele_lat = max(modeled_latency(r, eng, "telerag") for r in res)
+            cpu_lat = max(modeled_latency(r, eng, "cpu_baseline")
+                          for r in res)
+            # breakdown (Fig 12): llm vs retrieval share per system
+            t_llm = sum(rt.t_llm_window for r in res for rt in r.rounds) / bs
+            t_cc = paper_scale_tcc(eng.cfg.hw)
+            t_cpu_ret = sum((rt.hits + rt.misses) * t_cc
+                            for r in res for rt in r.rounds) / bs
+            t_tel_ret = sum(max(rt.misses * t_cc,
+                                rt.hits * PAPER_CLUSTER_BYTES
+                                / (eng.cfg.hw.hbm_bw * eng.cfg.chips))
+                            for r in res for rt in r.rounds) / bs
+            rows.append({
+                "pipeline": pipe, "batch": bs,
+                "telerag_qps": round(bs / tele_lat, 3),
+                "cpu_qps": round(bs / cpu_lat, 3),
+                "speedup": round(cpu_lat / tele_lat, 3),
+                "t_llm_ms": round(t_llm * 1e3, 2),
+                "t_retrieval_cpu_ms": round(t_cpu_ret * 1e3, 2),
+                "t_retrieval_telerag_ms": round(t_tel_ret * 1e3, 2),
+            })
+            emit(f"throughput/{pipe}/b{bs}", tele_lat * 1e6,
+                 f"qps={rows[-1]['telerag_qps']};speedup={rows[-1]['speedup']}")
+    write_csv("fig10_throughput", rows)
+    # Fig 12 check: speedup should not decrease with batch
+    for pipe in pipelines:
+        sp = [r["speedup"] for r in rows if r["pipeline"] == pipe]
+        if len(sp) > 1 and sp[-1] < sp[0] * 0.9:
+            print(f"# WARN {pipe}: speedup fell with batch {sp}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

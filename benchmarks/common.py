@@ -1,0 +1,91 @@
+"""Shared benchmark fixtures: a mid-scale datastore + engines.
+
+Scale model: the paper's index is 21M vectors × 768d in 4096 clusters
+(61 GB, nprobe 256 = 4√Nc). The CPU-budget version here keeps the same
+*shape ratios* at 1/64 scale: 320k × 256d in 256 clusters, nprobe 64
+(= 4√256), and the latency MODEL uses the paper-scale byte counts so
+modeled numbers are paper-comparable (measured quantities — hit rates,
+coverage, bytes moved, scheduling quality — are scale-honest).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+import repro.core as core
+from repro.configs import get_arch
+from repro.serving import EngineConfig, TeleRAGEngine
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "bench")
+
+NPROBE = 64           # 4 * sqrt(256)
+TOP_K = 3
+DIM = 256
+N_VECTORS = 320_000
+N_CLUSTERS = 256
+PAGE_SIZE = 128
+
+# paper-scale constants for the latency model (61 GB / 4096 clusters)
+PAPER_CLUSTER_BYTES = 61e9 / 4096
+
+
+@functools.lru_cache(maxsize=1)
+def bench_store():
+    return core.synthetic_datastore(N_VECTORS, dim=DIM, seed=0,
+                                    num_topics=192)
+
+
+@functools.lru_cache(maxsize=1)
+def bench_index():
+    t0 = time.time()
+    idx = core.build_ivf(bench_store(), N_CLUSTERS, page_size=PAGE_SIZE,
+                         kmeans_iters=5, train_sample=80_000)
+    print(f"# built bench index in {time.time()-t0:.1f}s "
+          f"(avg cluster {idx.paged.cluster_sizes.mean():.0f} vecs)")
+    return idx
+
+
+def bench_queries(n: int, seed: int = 1, jitter: float = 0.08) -> np.ndarray:
+    store = bench_store()
+    rng = np.random.default_rng(seed)
+    q = store.embeddings[rng.choice(store.num_vectors, n)]
+    q = q + jitter * rng.standard_normal(q.shape).astype(np.float32)
+    return q / np.linalg.norm(q, axis=-1, keepdims=True)
+
+
+def make_engine(mode: str = "telerag", *, buffer_pages: int = 640,
+                budget_bytes=None, cache: bool = False, arch="llama3-8b",
+                chips: int = 4, seed: int = 0) -> TeleRAGEngine:
+    cfg = EngineConfig(
+        nprobe=NPROBE, top_k=TOP_K, buffer_pages=buffer_pages,
+        lookahead_rank=min(2 * NPROBE, N_CLUSTERS), mode=mode,
+        kernel_mode="ref", cache_enabled=cache,
+        prefetch_budget_bytes=budget_bytes, chips=chips, seed=seed)
+    return TeleRAGEngine(bench_index(), cfg, get_arch(arch))
+
+
+def paper_scale_tcc(hw=core.TPU_V5E) -> float:
+    """Host per-cluster search time at PAPER datastore scale."""
+    return core.host_cluster_search_seconds(PAPER_CLUSTER_BYTES, hw)
+
+
+def write_csv(name: str, rows: List[Dict]) -> str:
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    path = os.path.join(BENCH_DIR, f"{name}.csv")
+    if rows:
+        keys = list(rows[0].keys())
+        with open(path, "w") as f:
+            f.write(",".join(keys) + "\n")
+            for r in rows:
+                f.write(",".join(str(r[k]) for k in keys) + "\n")
+    return path
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,58 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV to stdout and writes detailed
+CSVs to experiments/bench/. Run: PYTHONPATH=src python -m benchmarks.run
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_breakdown, bench_budget, bench_hitrate,
+                            bench_kernels, bench_latency, bench_nprobe,
+                            bench_overlap, bench_sched, bench_scaling,
+                            bench_throughput)
+
+    benches = {
+        "overlap": lambda: bench_overlap.run(64 if args.quick else 256),
+        "hitrate": lambda: bench_hitrate.run(8 if args.quick else 32),
+        "latency": lambda: bench_latency.run(4 if args.quick else 16),
+        "throughput": lambda: bench_throughput.run(
+            (1, 4) if args.quick else (1, 2, 4, 8)),
+        "scaling": lambda: bench_scaling.run(
+            (1, 2) if args.quick else (1, 2, 4, 8),
+            global_batch=8 if args.quick else 32),
+        "sched": lambda: bench_sched.run(
+            global_batch=8 if args.quick else 32),
+        "nprobe": lambda: bench_nprobe.run(
+            (16, 64) if args.quick else (16, 32, 64, 128)),
+        "breakdown": lambda: bench_breakdown.run(4 if args.quick else 8),
+        "budget": lambda: bench_budget.run(
+            n_queries=4 if args.quick else 16),
+        "kernels": lambda: bench_kernels.run(
+            P=512 if args.quick else 2048),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0,FAILED:{type(e).__name__}:{e}", file=sys.stderr)
+            raise
+    print(f"# total wall {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Beyond-paper: datastore-SHARDED distributed retrieval (paper §7).
+
+The paper's default multi-GPU mode is data parallelism with per-replica
+prefetch buffers. §7 sketches the alternative — shard the datastore
+across devices — which we implement with shard_map: each shard computes
+a local top-k over its slab shard and only the k candidates are
+all-gathered (never raw vectors). This example runs it on the host
+devices and checks it against the single-device search.
+
+Run: XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+     PYTHONPATH=src python examples/sharded_retrieval.py
+"""
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro.core as core
+from repro.kernels import ref
+
+
+def main():
+    print(f"devices: {jax.device_count()}")
+    mesh = jax.make_mesh((jax.device_count(),), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    store = core.synthetic_datastore(32_000, dim=128, seed=0)
+    index = core.build_ivf(store, 32, page_size=64, kmeans_iters=4)
+    paged = index.paged
+
+    # slab = the whole paged store, sharded over devices on the page dim
+    P = (paged.total_pages // jax.device_count()) * jax.device_count()
+    pages = jnp.asarray(paged.pages[:P])
+    ids = jnp.asarray(paged.page_ids[:P])
+    mask = jnp.ones((P,), bool)
+
+    rng = np.random.default_rng(1)
+    q = store.embeddings[rng.choice(store.num_vectors, 4)]
+    q = jnp.asarray(q / np.linalg.norm(q, axis=-1, keepdims=True))
+
+    s, i = core.sharded_device_search(mesh, q, pages, ids, mask, k=5)
+    s_ref, i_ref = ref.ivf_topk_ref(pages, ids, mask, q, 5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-5)
+    print("sharded top-k == single-device top-k ✓")
+    print("candidate bytes all-gathered per query:",
+          2 * 5 * 8 * jax.device_count(), "B (vs",
+          pages.size * 2 // jax.device_count(), "B of raw vectors per shard)")
+
+
+if __name__ == "__main__":
+    main()

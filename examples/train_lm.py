@@ -1,0 +1,35 @@
+"""Train a ~100M-parameter llama-family model for a few hundred steps.
+
+Thin wrapper over the production driver (repro.launch.train) — same code
+path the cluster uses, scaled to one host. Demonstrates checkpoint/resume:
+the run is interrupted halfway and resumed from the latest checkpoint.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import subprocess
+import sys
+import tempfile
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="llama3-8b")
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        half = args.steps // 2
+        base = [sys.executable, "-m", "repro.launch.train",
+                "--arch", args.arch, "--preset", "100m",
+                "--batch", "8", "--seq", "256",
+                "--ckpt-dir", ckpt, "--ckpt-every", "25"]
+        print(f"== phase 1: steps 0..{half} (then 'crash') ==")
+        subprocess.run(base + ["--steps", str(half)], check=True)
+        print(f"== phase 2: resume from checkpoint -> {args.steps} ==")
+        subprocess.run(base + ["--steps", str(args.steps)], check=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Compose EXPERIMENTS.md from dry-run JSONs, hillclimb JSONs, bench CSVs.
+
+Run: PYTHONPATH=src python experiments/make_experiments_md.py
+"""
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+
+import sys
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.launch.report import (load_cells, roofline_table, summary,
+                                 worst_cells, most_collective_bound)
+
+
+def csv_table(path, title):
+    if not os.path.exists(path):
+        return f"*(missing: {os.path.basename(path)})*\n"
+    lines = open(path).read().strip().splitlines()
+    hdr = lines[0].split(",")
+    out = ["| " + " | ".join(hdr) + " |",
+           "|" + "---|" * len(hdr)]
+    for l in lines[1:]:
+        out.append("| " + " | ".join(l.split(",")) + " |")
+    return "\n".join(out) + "\n"
+
+
+def hillclimb_section():
+    rows = []
+    for f in sorted(glob.glob(os.path.join(HERE, "hillclimb", "*.json"))):
+        d = json.load(open(f))
+        if d.get("status") != "ok":
+            rows.append((d.get("variant_name", f), d, None))
+            continue
+        rows.append((d["variant_name"], d, d["roofline"]))
+    cells = {}
+    for name, d, r in rows:
+        cell = os.path.basename(
+            [f for f in glob.glob(os.path.join(HERE, "hillclimb", "*.json"))
+             if json.load(open(f)).get("variant_name") == name][0]
+        ).split("__")[0]
+        cells.setdefault(cell, []).append((name, d, r))
+    out = []
+    for cell, variants in cells.items():
+        out.append(f"\n### {cell}\n")
+        out.append("| variant | t_compute | t_memory | t_collective | bound "
+                   "| peak GB | Δ dominant vs prev | verdict |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        prev = None
+        for name, d, r in variants:
+            if r is None:
+                out.append(f"| {name} | — | — | — | — | — | — | failed |")
+                continue
+            dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+            delta = ""
+            verdict = "baseline"
+            if prev is not None:
+                prev_dom = max(prev["t_compute_s"], prev["t_memory_s"],
+                               prev["t_collective_s"])
+                delta = f"{(dom - prev_dom) / prev_dom * 100:+.0f}%"
+                verdict = "confirmed" if dom < prev_dom * 0.95 else (
+                    "refuted" if dom > prev_dom * 1.05 else "neutral")
+            out.append(
+                f"| {name} | {r['t_compute_s']*1e3:.0f}ms "
+                f"| {r['t_memory_s']*1e3:.0f}ms "
+                f"| {r['t_collective_s']*1e3:.0f}ms | {r['bottleneck']} "
+                f"| {d['memory']['peak_bytes']/1e9:.1f} | {delta} "
+                f"| {verdict} |")
+            out.append(f"|  | *hypothesis: {d.get('hypothesis','')}* |||||||")
+            prev = r
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    parts = []
+    parts.append(open(os.path.join(HERE, "EXPERIMENTS_header.md")).read())
+
+    parts.append("\n## §Dry-run\n")
+    for mesh in ("pod16x16", "pod2x16x16"):
+        cells = load_cells(os.path.join(HERE, "dryrun"), mesh)
+        s = summary(cells)
+        parts.append(
+            f"\n**{mesh}** ({'256' if mesh=='pod16x16' else '512'} chips): "
+            f"{s['ok']} cells compiled OK, {s['skipped']} recorded skips, "
+            f"{s['failed']} failures; {s['fits']}/{s['ok']} fit 16 GB/chip; "
+            f"total compile wall {s['compile_s']:.0f}s on one CPU core.\n")
+    parts.append(open(os.path.join(HERE, "EXPERIMENTS_dryrun_notes.md")).read()
+                 if os.path.exists(os.path.join(HERE,
+                                                "EXPERIMENTS_dryrun_notes.md"))
+                 else "")
+
+    parts.append("\n## §Roofline\n")
+    parts.append(open(os.path.join(HERE,
+                                   "EXPERIMENTS_roofline_notes.md")).read()
+                 if os.path.exists(os.path.join(
+                     HERE, "EXPERIMENTS_roofline_notes.md")) else "")
+    for mesh in ("pod16x16", "pod2x16x16"):
+        cells = load_cells(os.path.join(HERE, "dryrun"), mesh)
+        parts.append(f"\n### {mesh}\n")
+        parts.append(roofline_table(cells))
+        parts.append(f"\nworst roofline fractions: {worst_cells(cells, 3)}\n")
+        parts.append(f"most collective-bound: "
+                     f"{most_collective_bound(cells, 3)}\n")
+
+    parts.append("\n## §Perf — hillclimb log\n")
+    parts.append(open(os.path.join(HERE, "EXPERIMENTS_perf_notes.md")).read()
+                 if os.path.exists(os.path.join(HERE,
+                                                "EXPERIMENTS_perf_notes.md"))
+                 else "")
+    parts.append(hillclimb_section())
+
+    parts.append("\n## Benchmark results (paper tables/figures)\n")
+    bench = os.path.join(HERE, "bench")
+    for name, title in [
+        ("table1_overlap", "Table 1 — IVF cluster overlap (measured)"),
+        ("table3_hitrate", "Table 3 — budgets & hit rates (measured)"),
+        ("fig9_latency", "Fig. 9 — single-query latency (modeled @ paper scale)"),
+        ("fig10_throughput", "Fig. 10/12 — batched throughput"),
+        ("fig11_13_scaling", "Fig. 11/13 — multi-replica scaling & cache"),
+        ("fig14_sched", "Fig. 14 — scheduler overhead/benefit"),
+        ("fig15_nprobe", "Fig. 15 — retrieval speedup vs nprobe"),
+        ("fig4_5_breakdown", "Fig. 4/5 — latency breakdown"),
+        ("appC_budget", "Appendix C — budget model"),
+        ("kernel_ivf_topk", "Kernel — fused ivf_topk roofline"),
+    ]:
+        parts.append(f"\n### {title}\n")
+        parts.append(csv_table(os.path.join(bench, f"{name}.csv"), title))
+
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write("\n".join(parts))
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""TeleRAG core: lookahead retrieval and its supporting machinery."""
+
+from repro.core.budget import (HardwareProfile, TPU_V5E, RTX4090, H100,
+                               host_cluster_search_seconds,
+                               case1_budget, case2_budget, optimal_budget,
+                               decode_step_seconds, generation_window_seconds,
+                               empirical_miss_curve)
+from repro.core.cache import CacheConfig, ClusterCache
+from repro.core.datastore import (Datastore, PagedClusters,
+                                  build_paged_clusters, synthetic_datastore)
+from repro.core.embedder import HashEmbedder, synthetic_rewrite
+from repro.core.hybrid_search import (RetrievalResult, host_search,
+                                      hybrid_retrieve, merge_topk,
+                                      sharded_device_search)
+from repro.core.ivf import IVFIndex, build_ivf, kmeans, probe, probe_device
+from repro.core.lookahead import (PrefetchPlan, RoundState,
+                                  plan_batched_prefetch, plan_prefetch)
+from repro.core.overlap import (PIPELINE_SIGMA, coverage, overlap_table,
+                                pipeline_pairs)
+from repro.core.prefetch_buffer import PrefetchBuffer, TransferStats
+from repro.core.schedulers import (Assignment, ReplicaHealth,
+                                   assign_to_replicas, group_queries,
+                                   grouping_shared_cluster_gain)
+
+__all__ = [
+    "HardwareProfile", "TPU_V5E", "RTX4090", "H100",
+    "case1_budget", "case2_budget", "optimal_budget", "decode_step_seconds",
+    "host_cluster_search_seconds",
+    "generation_window_seconds", "empirical_miss_curve",
+    "CacheConfig", "ClusterCache",
+    "Datastore", "PagedClusters", "build_paged_clusters", "synthetic_datastore",
+    "HashEmbedder", "synthetic_rewrite",
+    "RetrievalResult", "host_search", "hybrid_retrieve", "merge_topk",
+    "sharded_device_search",
+    "IVFIndex", "build_ivf", "kmeans", "probe", "probe_device",
+    "PrefetchPlan", "RoundState", "plan_batched_prefetch", "plan_prefetch",
+    "PIPELINE_SIGMA", "coverage", "overlap_table", "pipeline_pairs",
+    "PrefetchBuffer", "TransferStats",
+    "Assignment", "ReplicaHealth", "assign_to_replicas", "group_queries",
+    "grouping_shared_cluster_gain",
+]

@@ -1,0 +1,115 @@
+"""IVF index: JAX k-means build + centroid probing (paper Appendix B).
+
+The coarse quantizer (centroid probe) is small — [Nc, d] with Nc=4096 —
+and runs on-device every query (it is also what *lookahead* runs on q_in
+before the rewrite exists). The fine search over cluster contents is the
+hybrid device/host search in ``hybrid_search.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.datastore import Datastore, PagedClusters, build_paged_clusters
+
+
+@dataclass
+class IVFIndex:
+    centroids: np.ndarray       # [Nc, d] float32
+    assignments: np.ndarray     # [N] int32
+    paged: PagedClusters
+
+    @property
+    def num_clusters(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.centroids.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# k-means (jit, chunked over points so huge N never materializes [N, Nc])
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _assign(points: jax.Array, centroids: jax.Array, chunk: int = 65536):
+    n = points.shape[0]
+    nch = max(n // chunk, 1)
+    if n % nch:
+        nch = 1
+    pts = points.reshape(nch, n // nch, -1)
+
+    def body(_, p):
+        sims = p @ centroids.T                    # inner product (unit vectors)
+        return None, jnp.argmax(sims, axis=-1)
+
+    _, a = jax.lax.scan(body, None, pts)
+    return a.reshape(n)
+
+
+@functools.partial(jax.jit, donate_argnums=(1,))
+def _update(points: jax.Array, centroids: jax.Array, assign: jax.Array):
+    nc = centroids.shape[0]
+    one = jax.nn.one_hot(assign, nc, dtype=jnp.float32)       # [N, Nc]
+    sums = one.T @ points
+    counts = jnp.sum(one, axis=0)[:, None]
+    new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), centroids)
+    norms = jnp.linalg.norm(new, axis=-1, keepdims=True)
+    return new / jnp.maximum(norms, 1e-9)
+
+
+def kmeans(points: np.ndarray, num_clusters: int, *, iters: int = 10,
+           seed: int = 0, sample: Optional[int] = None) -> np.ndarray:
+    """Spherical k-means (inner-product metric, matching the paper's index)."""
+    rng = np.random.default_rng(seed)
+    train = points
+    if sample is not None and sample < len(points):
+        train = points[rng.choice(len(points), sample, replace=False)]
+    init_idx = rng.choice(len(train), num_clusters, replace=False)
+    cent = jnp.asarray(train[init_idx])
+    pts = jnp.asarray(train)
+    for _ in range(iters):
+        a = _assign(pts, cent)
+        cent = _update(pts, cent, a)
+    return np.asarray(cent)
+
+
+def build_ivf(store: Datastore, num_clusters: int, *, page_size: int = 512,
+              kmeans_iters: int = 10, seed: int = 0,
+              train_sample: Optional[int] = None) -> IVFIndex:
+    cent = kmeans(store.embeddings, num_clusters, iters=kmeans_iters,
+                  seed=seed, sample=train_sample)
+    assign = np.asarray(_assign(jnp.asarray(store.embeddings), jnp.asarray(cent)))
+    paged = build_paged_clusters(store, assign, num_clusters, page_size)
+    return IVFIndex(centroids=cent, assignments=assign.astype(np.int32),
+                    paged=paged)
+
+
+# ---------------------------------------------------------------------------
+# Probing
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe",))
+def probe_device(queries: jax.Array, centroids: jax.Array, nprobe: int,
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Ranked top-nprobe clusters per query. queries [B, d] -> ids [B, nprobe]."""
+    sims = jnp.einsum("bd,cd->bc", queries.astype(jnp.float32),
+                      centroids.astype(jnp.float32))
+    scores, ids = jax.lax.top_k(sims, nprobe)
+    return scores, ids
+
+
+def probe(queries: np.ndarray, index: IVFIndex, nprobe: int) -> np.ndarray:
+    """Host convenience wrapper; returns [B, nprobe] int32 cluster ids."""
+    q = np.atleast_2d(queries)
+    _, ids = probe_device(jnp.asarray(q), jnp.asarray(index.centroids), nprobe)
+    return np.asarray(ids, np.int32)

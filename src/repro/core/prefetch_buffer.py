@@ -1,0 +1,195 @@
+"""Fixed-size paged device buffer for prefetched IVF clusters.
+
+TPU analogue of the paper's pinned-CPU→GPU contiguous prefetch buffer
+(Appendix D): a slab of ``num_pages`` page slots in device HBM plus a
+host-side page table. All device mutation happens through ONE batched,
+donated scatter per prefetch round — the JAX equivalent of an async DMA
+burst (dispatch is async; the subsequent decode steps overlap with it).
+
+Consistency invariants (tests/test_prefetch_buffer.py):
+  * a device slot always holds a whole, un-corrupted page of exactly one
+    cluster (page granularity transfers);
+  * eviction is host bookkeeping + queued device invalidation — a slot is
+    never searchable once its cluster was evicted (no duplicate results
+    after refetch into different slots);
+  * transfers are counted in bytes for the budget/telemetry layer.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.datastore import PagedClusters
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _scatter_pages(pages, page_ids, page_cluster, slots, new_pages, new_ids,
+                   new_clusters):
+    """One fused slab update; out-of-range slot indices are dropped (padding)."""
+    pages = pages.at[slots].set(new_pages.astype(pages.dtype), mode="drop")
+    page_ids = page_ids.at[slots].set(new_ids, mode="drop")
+    page_cluster = page_cluster.at[slots].set(new_clusters, mode="drop")
+    return pages, page_ids, page_cluster
+
+
+def _round_up_pow2(n: int, lo: int = 8) -> int:
+    r = lo
+    while r < n:
+        r *= 2
+    return r
+
+
+@dataclass
+class TransferStats:
+    bytes_h2d: int = 0
+    pages_h2d: int = 0
+    rounds: int = 0
+
+    def add(self, pages: int, page_bytes: int):
+        self.pages_h2d += pages
+        self.bytes_h2d += pages * page_bytes
+        self.rounds += 1
+
+
+class PrefetchBuffer:
+    def __init__(self, paged: PagedClusters, num_pages: int,
+                 dtype=jnp.bfloat16):
+        self.paged = paged
+        self.num_pages = num_pages
+        self.dtype = dtype
+        ps, d = paged.page_size, paged.dim
+        self.pages = jnp.zeros((num_pages, ps, d), dtype)
+        self.page_ids = jnp.full((num_pages, ps), -1, jnp.int32)
+        self.page_cluster = jnp.full((num_pages,), -1, jnp.int32)
+        # host mirrors / page table
+        self.slot_cluster = np.full(num_pages, -1, np.int64)
+        self.resident: Dict[int, List[int]] = {}
+        self.free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._pending_invalid: Set[int] = set()
+        self.stats = TransferStats()
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def page_nbytes(self) -> int:
+        return self.paged.page_nbytes()
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.num_pages * self.page_nbytes
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self.free)
+
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    def resident_clusters(self) -> Set[int]:
+        return set(self.resident)
+
+    def is_resident(self, cluster: int) -> bool:
+        return cluster in self.resident
+
+    # -- load --------------------------------------------------------------
+    def load_clusters(self, clusters: Sequence[int],
+                      ) -> Tuple[List[int], List[int]]:
+        """Fetch whole clusters into free slots. Returns (loaded, rejected).
+
+        Rejected = not enough free slots for the *whole* cluster (caller's
+        planner should have prevented this; kept as a hard guarantee).
+        """
+        loaded: List[int] = []
+        rejected: List[int] = []
+        slot_list: List[int] = []
+        np_pages: List[np.ndarray] = []
+        np_ids: List[np.ndarray] = []
+        np_cl: List[int] = []
+        for c in clusters:
+            c = int(c)
+            if c in self.resident:
+                loaded.append(c)
+                continue
+            npg = int(self.paged.cluster_num_pages[c])
+            if npg > len(self.free):
+                rejected.append(c)
+                continue
+            slots = [self.free.pop() for _ in range(npg)]
+            self.resident[c] = slots
+            self.slot_cluster[slots] = c
+            self._pending_invalid.difference_update(slots)
+            pg = self.paged.cluster_pages(c)
+            pidc = self.paged.cluster_page_ids(c)
+            for i, s in enumerate(slots):
+                slot_list.append(s)
+                np_pages.append(pg[i])
+                np_ids.append(pidc[i])
+                np_cl.append(c)
+            loaded.append(c)
+
+        # fold queued invalidations into the same scatter
+        for s in sorted(self._pending_invalid):
+            slot_list.append(s)
+            np_pages.append(np.zeros((self.paged.page_size, self.paged.dim),
+                                     np.float32))
+            np_ids.append(np.full(self.paged.page_size, -1, np.int32))
+            np_cl.append(-1)
+        self._pending_invalid.clear()
+
+        if slot_list:
+            n = len(slot_list)
+            cap = _round_up_pow2(n)   # bucket sizes => bounded recompiles
+            slots_arr = np.full(cap, self.num_pages, np.int32)  # OOB = dropped
+            slots_arr[:n] = slot_list
+            pages_arr = np.zeros((cap, self.paged.page_size, self.paged.dim),
+                                 np.float32)
+            pages_arr[:n] = np.stack(np_pages)
+            ids_arr = np.full((cap, self.paged.page_size), -1, np.int32)
+            ids_arr[:n] = np.stack(np_ids)
+            cl_arr = np.full(cap, -1, np.int32)
+            cl_arr[:n] = np_cl
+            # async dispatch: device_put + scatter overlap with LLM decode
+            self.pages, self.page_ids, self.page_cluster = _scatter_pages(
+                self.pages, self.page_ids, self.page_cluster,
+                jnp.asarray(slots_arr), jnp.asarray(pages_arr),
+                jnp.asarray(ids_arr), jnp.asarray(cl_arr))
+            new_pages = sum(1 for c in np_cl if c >= 0)
+            self.stats.add(new_pages, self.page_nbytes)
+        return loaded, rejected
+
+    # -- evict -------------------------------------------------------------
+    def evict_clusters(self, clusters: Sequence[int]) -> int:
+        """Host-side free + queued device invalidation. Returns pages freed."""
+        freed = 0
+        for c in clusters:
+            c = int(c)
+            slots = self.resident.pop(c, None)
+            if slots is None:
+                continue
+            self.slot_cluster[slots] = -1
+            self.free.extend(slots)
+            self._pending_invalid.update(slots)
+            freed += len(slots)
+        return freed
+
+    def flush_invalidations(self) -> None:
+        """Force queued invalidations to the device (normally folded into
+        the next load; needed before a search with no intervening load)."""
+        if self._pending_invalid:
+            self.load_clusters([])
+
+    # -- views for the search kernel ----------------------------------------
+    def device_view(self):
+        return self.pages, self.page_ids, self.page_cluster
+
+    def allowed_lut(self, clusters: Sequence[int]) -> jax.Array:
+        """Boolean LUT [Nc] marking clusters searchable on-device."""
+        lut = np.zeros(self.paged.num_clusters + 1, bool)   # +1: cluster -1 pad
+        res = [c for c in clusters if c in self.resident]
+        lut[res] = True
+        return jnp.asarray(lut)

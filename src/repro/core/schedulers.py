@@ -1,0 +1,139 @@
+"""TeleRAG's two schedulers (paper §4.2, Fig. 7).
+
+Prefetching scheduler: greedily groups semantically similar queries into
+micro-batches (lowest pairwise L2 distance) so grouped queries share
+prefetched clusters under the split budget. O(B²) distances via one
+matmul + host greedy sweep — the paper measures <0.1 s at B=256; ours is
+well under that on one core.
+
+Cache-aware scheduler: assigns micro-batches to replicas ("GPUs") by
+greatest overlap between the batch's predicted clusters and each
+replica's resident cache, highest-overlap-first, with a load cap so
+work stays balanced (and a deadline hook for straggler re-queue).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Prefetching scheduler
+# ---------------------------------------------------------------------------
+
+
+def group_queries(embeddings: np.ndarray, micro_batch: int,
+                  ) -> List[List[int]]:
+    """Greedy similarity grouping. embeddings [B, d] -> list of index groups."""
+    B = embeddings.shape[0]
+    if B == 0:
+        return []
+    # pairwise squared L2 via gram matrix (one matmul)
+    sq = np.sum(embeddings ** 2, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (embeddings @ embeddings.T)
+    np.fill_diagonal(d2, np.inf)
+    unassigned = set(range(B))
+    groups: List[List[int]] = []
+    while unassigned:
+        seed = min(unassigned)                      # deterministic
+        group = [seed]
+        unassigned.remove(seed)
+        while len(group) < micro_batch and unassigned:
+            # nearest unassigned query to the group (min over members)
+            rows = d2[np.asarray(group)][:, np.asarray(sorted(unassigned))]
+            cand_sorted = np.asarray(sorted(unassigned))
+            nxt = int(cand_sorted[np.argmin(np.min(rows, axis=0))])
+            group.append(nxt)
+            unassigned.remove(nxt)
+        groups.append(group)
+    return groups
+
+
+def grouping_shared_cluster_gain(ranked_per_query: Sequence[Sequence[int]],
+                                 groups: Sequence[Sequence[int]],
+                                 top: int = 64) -> float:
+    """Diagnostic: average fraction of top clusters shared within groups."""
+    fracs = []
+    for g in groups:
+        if len(g) < 2:
+            continue
+        sets = [set(list(ranked_per_query[i])[:top]) for i in g]
+        union = set().union(*sets)
+        total = sum(len(s) for s in sets)
+        fracs.append(1.0 - len(union) / max(total, 1))
+    return float(np.mean(fracs)) if fracs else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Cache-aware scheduler
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Assignment:
+    replica: int
+    batch_index: int
+    overlap: int
+
+
+def assign_to_replicas(batch_clusters: Sequence[Set[int]],
+                       replica_caches: Sequence[Set[int]], *,
+                       max_per_replica: Optional[int] = None,
+                       ) -> List[Assignment]:
+    """Greedy max-overlap assignment (paper: pick the (batch, GPU) pair with
+    the greatest cached-cluster overlap, repeat in descending order)."""
+    n_b, n_r = len(batch_clusters), len(replica_caches)
+    if n_r == 0:
+        return []
+    cap = max_per_replica or -(-n_b // n_r)
+    overlap = np.zeros((n_b, n_r), np.int64)
+    for i, bc in enumerate(batch_clusters):
+        for r, rc in enumerate(replica_caches):
+            overlap[i, r] = len(bc & rc)
+    load = np.zeros(n_r, np.int64)
+    taken = np.zeros(n_b, bool)
+    out: List[Assignment] = []
+    masked = overlap.astype(np.float64).copy()
+    for _ in range(n_b):
+        masked[taken, :] = -1
+        masked[:, load >= cap] = -1
+        i, r = np.unravel_index(np.argmax(masked), masked.shape)
+        if masked[i, r] < 0:     # everything capped — spill round-robin
+            i = int(np.argmin(taken))
+            r = int(np.argmin(load))
+        out.append(Assignment(replica=int(r), batch_index=int(i),
+                              overlap=int(overlap[i, r])))
+        taken[int(i)] = True
+        load[int(r)] += 1
+        masked = overlap.astype(np.float64).copy()
+    out.sort(key=lambda a: a.batch_index)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Straggler mitigation / elastic hooks (used by the engine + tests)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReplicaHealth:
+    deadline_s: float = 5.0
+    last_seen: Dict[int, float] = field(default_factory=dict)
+
+    def heartbeat(self, replica: int, now: float) -> None:
+        self.last_seen[replica] = now
+
+    def healthy(self, replicas: Sequence[int], now: float) -> List[int]:
+        return [r for r in replicas
+                if now - self.last_seen.get(r, now) < self.deadline_s]
+
+    def requeue_straggler_batches(self, assignments: List[Assignment],
+                                  dead: Set[int]) -> Tuple[List[Assignment],
+                                                           List[int]]:
+        """Drop assignments on dead replicas; return surviving + re-queue."""
+        alive = [a for a in assignments if a.replica not in dead]
+        requeue = [a.batch_index for a in assignments if a.replica in dead]
+        return alive, requeue

@@ -1,0 +1,19 @@
+from repro.distributed.compression import (compressed_psum, compression_ratio,
+                                           dequantize_int8,
+                                           init_error_feedback, quantize_int8)
+from repro.distributed.fault_tolerance import (ElasticRun, HeartbeatMonitor,
+                                               StragglerPolicy, elastic_slices)
+from repro.distributed.sharding import (RULES_DEFAULT, RULES_FSDP,
+                                        RULES_FSDP_LONG,
+                                        RULES_LONG_CONTEXT, cache_shardings,
+                                        data_sharding, param_shardings,
+                                        replicated, spec_for, tree_shardings)
+
+__all__ = [
+    "compressed_psum", "compression_ratio", "dequantize_int8",
+    "init_error_feedback", "quantize_int8",
+    "ElasticRun", "HeartbeatMonitor", "StragglerPolicy", "elastic_slices",
+    "RULES_DEFAULT", "RULES_FSDP", "RULES_FSDP_LONG", "RULES_LONG_CONTEXT",
+    "cache_shardings", "data_sharding", "param_shardings", "replicated",
+    "spec_for", "tree_shardings",
+]

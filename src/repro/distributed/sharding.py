@@ -1,0 +1,117 @@
+"""Logical-axis sharding rules → concrete NamedShardings.
+
+Parameters/caches carry logical axis names (see ``layers.Maker``); this
+module maps them onto mesh axes with two safety passes:
+  * divisibility — a dim that doesn't divide by the mesh axis size is
+    replicated instead (e.g. granite-20b's single KV head under TP=16);
+  * uniqueness — a mesh axis may appear once per spec; the first logical
+    dim that claims it wins (e.g. long-context KV: seq takes ``model``,
+    so kv_heads drops to replicated).
+
+Rule sets:
+  RULES_DEFAULT       — TP over heads/mlp/vocab/experts, DP over batch
+  RULES_LONG_CONTEXT  — additionally shards kv_seq over ``model``
+                        (sequence-parallel decode for long_500k)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+Rules = Dict[str, Any]
+
+RULES_DEFAULT: Rules = {
+    "batch": ("pod", "data"),
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "heads_flat": "model",
+    "mlp": "model",
+    "experts": "model",
+    "embed": None,
+    "embed2": None,
+    "layers": None,
+    "kv_seq": None,
+}
+
+RULES_LONG_CONTEXT: Rules = dict(RULES_DEFAULT, kv_seq="model")
+
+# FSDP-style 2-D weight sharding: d_model over the data (+pod) axes on top
+# of TP. Required for training big archs (arctic-480b params+optimizer do
+# not fit under TP-16 alone) and for serving arctic.
+RULES_FSDP: Rules = dict(RULES_DEFAULT, embed=("data", "pod"))
+RULES_FSDP_LONG: Rules = dict(RULES_FSDP, kv_seq="model")
+
+
+def _mesh_axes(mesh: Mesh, rule) -> Tuple[str, ...]:
+    if rule is None:
+        return ()
+    axes = rule if isinstance(rule, tuple) else (rule,)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+             mesh: Mesh, rules: Rules) -> P:
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        entry: Any = None
+        if ax is not None:
+            maxes = _mesh_axes(mesh, rules.get(ax))
+            maxes = tuple(a for a in maxes if a not in used)
+            if maxes:
+                size = 1
+                for a in maxes:
+                    size *= mesh.shape[a]
+                if dim % size == 0 and dim > 0:
+                    entry = maxes if len(maxes) > 1 else maxes[0]
+                    used.update(maxes)
+        out.append(entry)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_shardings(axes_tree, shapes_tree, mesh: Mesh, rules: Rules):
+    """Zip an axes tree with a ShapeDtypeStruct tree -> NamedSharding tree."""
+    is_ax = lambda x: isinstance(x, tuple)
+    flat_ax, treedef = jax.tree.flatten(axes_tree, is_leaf=is_ax)
+    flat_sh = jax.tree.leaves(shapes_tree)
+    assert len(flat_ax) == len(flat_sh), (len(flat_ax), len(flat_sh))
+    specs = [NamedSharding(mesh, spec_for(a, s.shape, mesh, rules))
+             for a, s in zip(flat_ax, flat_sh)]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, rules: Rules = RULES_DEFAULT):
+    """NamedSharding tree for ``transformer.init_params`` output."""
+    from repro.models import transformer as tf
+    axes = tf.param_axes(cfg)
+    shapes = jax.eval_shape(lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+    return tree_shardings(axes, shapes, mesh, rules)
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, batch: int, max_len: int,
+                    rules: Rules = RULES_DEFAULT):
+    from repro.models import transformer as tf
+    axes = tf.cache_axes(cfg)
+    shapes = jax.eval_shape(lambda: tf.init_cache(cfg, batch, max_len))
+    return tree_shardings(axes, shapes, mesh, rules)
+
+
+def data_sharding(mesh: Mesh, *, extra_dims: int = 1,
+                  rules: Rules = RULES_DEFAULT) -> NamedSharding:
+    """[batch, ...] arrays: batch over (pod, data), rest replicated."""
+    axes = _mesh_axes(mesh, rules["batch"])
+    return NamedSharding(mesh, P(axes if len(axes) > 1 else
+                                 (axes[0] if axes else None)))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

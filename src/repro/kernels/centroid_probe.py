@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: masked centroid-distance matmul (IVF coarse probe).
+
+Probing needs top-nprobe (256) afterwards — too wide for unrolled
+in-kernel selection — so the kernel emits the full masked [B, Nc]
+distance matrix (Nc = 4096 is tiny) and ``lax.top_k`` runs outside.
+The kernel exists because the probe runs on *every* lookahead AND every
+retrieval: keeping queries VMEM-resident and streaming centroid tiles
+through the MXU is the TPU-native version of Faiss's coarse quantizer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, cent_ref, valid_ref, out_ref):
+    q = q_ref[...]                                    # [B, d]
+    c = cent_ref[...]                                 # [T, d]
+    v = valid_ref[0]                                  # [1, T]
+    s = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    out_ref[...] = jnp.where(v > 0, s, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def centroid_scores(queries: jax.Array, centroids: jax.Array,
+                    valid: jax.Array, *, tile: int = 512,
+                    interpret: bool = True) -> jax.Array:
+    """queries [B, d]; centroids [Nc, d] (Nc % tile == 0); valid [Nc].
+    Returns masked scores [B, Nc] fp32."""
+    B, d = queries.shape
+    Nc = centroids.shape[0]
+    assert Nc % tile == 0, (Nc, tile)
+    num_tiles = Nc // tile
+    valid2 = valid.astype(jnp.int8).reshape(num_tiles, 1, tile)
+    return pl.pallas_call(
+        _kernel,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((B, d), lambda t: (0, 0)),
+            pl.BlockSpec((tile, d), lambda t: (t, 0)),
+            pl.BlockSpec((1, 1, tile), lambda t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, tile), lambda t: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((B, Nc), jnp.float32),
+        interpret=interpret,
+    )(queries, centroids, valid2)

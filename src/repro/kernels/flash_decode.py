@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: single-token flash-decode attention (GQA).
+
+Serving hot path: one new query token attends over a [B, S, KVH, Dh] KV
+cache. Grid = (B, KVH, S-tiles); online-softmax state (m, l, acc) lives in
+VMEM scratch across the innermost S-tile loop; per-batch positions and
+sliding windows are masked with iota arithmetic — no gathers.
+
+VMEM working set per step: K/V tiles 2*tile*Dh*2B + G*Dh acc; with
+tile=512, Dh=128, G<=48 this stays well under 1 MiB, leaving headroom for
+double-buffered tile streaming (the default pallas pipeline).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, out_ref, m_s, l_s, acc_s, *,
+            tile: int, num_tiles: int, window: int, scale: float):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0]                                    # [G, Dh]
+    k = k_ref[0, :, 0, :]                              # [tile, Dh]
+    v = v_ref[0, :, 0, :]
+    pos = pos_ref[0]                                   # scalar int32
+
+    s = jax.lax.dot_general(q.astype(jnp.float32), k.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kp = t * tile + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+    mask = kp <= pos
+    if window > 0:
+        mask &= kp > pos - window
+    s = jnp.where(mask, s, NEG_INF)                    # [G, tile]
+
+    m_prev = m_s[...]                                  # [G, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(m_new > NEG_INF, m_new, 0.0)
+    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+    corr = jnp.where(m_prev > NEG_INF, jnp.exp(m_prev - m_safe), 0.0)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(t == num_tiles - 1)
+    def _flush():
+        out_ref[0, 0] = acc_s[...] / jnp.maximum(l_s[...], 1e-20)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "window", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
+                 window: int = 0, tile: int = 512,
+                 interpret: bool = True) -> jax.Array:
+    """q [B,KVH,G,Dh]; k,v [B,S,KVH,Dh]; pos [B] -> out [B,KVH,G,Dh] fp32."""
+    B, KVH, G, Dh = q.shape
+    S = k.shape[1]
+    tile = min(tile, S)
+    assert S % tile == 0, (S, tile)
+    num_tiles = S // tile
+    scale = 1.0 / math.sqrt(Dh)
+    grid = (B, KVH, num_tiles)
+    kern = functools.partial(_kernel, tile=tile, num_tiles=num_tiles,
+                             window=window, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, t: (b,)),                # pos
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, tile, 1, Dh), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, tile, 1, Dh), lambda b, h, t: (b, t, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh), lambda b, h, t: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, Dh), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, Dh), jnp.float32)],
+        interpret=interpret,
+    )(pos, q, k, v)

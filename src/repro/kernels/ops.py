@@ -1,0 +1,98 @@
+"""Jit'd public wrappers around the Pallas kernels with oracle fallback.
+
+Mode resolution:
+  * "auto"            — real kernel on TPU, jnp oracle elsewhere (fast CPU)
+  * "kernel"          — pallas kernel, compiled for the current backend
+  * "kernel_interpret"— pallas kernel body interpreted in Python (CPU
+                        validation path; what the parity tests use)
+  * "ref"             — pure-jnp oracle
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_mod
+from repro.kernels.centroid_probe import centroid_scores as _probe_kernel
+from repro.kernels.flash_decode import flash_decode as _flash_kernel
+from repro.kernels.ivf_topk import ivf_topk_flat as _ivf_kernel
+
+DEFAULT_MODE = "auto"
+
+
+def _resolve(mode: str) -> str:
+    if mode == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "ref"
+    return mode
+
+
+def _pad_rows(x: jax.Array, multiple: int, fill=0):
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def ivf_topk(pages: jax.Array, page_ids: jax.Array, page_mask: jax.Array,
+             queries: jax.Array, k: int, *, tile: int = 1024,
+             mode: str = DEFAULT_MODE) -> Tuple[jax.Array, jax.Array]:
+    """Search the prefetch slab. pages [P,ps,d]; page_mask [P] or per-query
+    [B,P]; queries [B,d] -> (scores [B,k], ids [B,k])."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref_mod.ivf_topk_ref(pages, page_ids, page_mask, queries, k)
+    B = queries.shape[0]
+    P, ps, d = pages.shape
+    flat = pages.reshape(P * ps, d)
+    ids = page_ids.reshape(P * ps)
+    if page_mask.ndim == 1:
+        page_mask = jnp.broadcast_to(page_mask[None, :], (B, P))
+    # tile must be a multiple of the page size and divide the padded slab
+    tile = max(ps, (min(tile, P * ps) // ps) * ps)
+    flat = _pad_rows(flat, tile)
+    ids = _pad_rows(ids, tile, fill=-1)
+    pad_pages = (flat.shape[0] - P * ps) // ps
+    if pad_pages:
+        page_mask = jnp.pad(page_mask, ((0, 0), (0, pad_pages)))
+    return _ivf_kernel(queries, flat, ids, page_mask, k=k, page_size=ps,
+                       tile=tile, interpret=(m == "kernel_interpret"))
+
+
+def centroid_probe(centroids: jax.Array, queries: jax.Array, nprobe: int, *,
+                   valid: Optional[jax.Array] = None, tile: int = 512,
+                   mode: str = DEFAULT_MODE) -> Tuple[jax.Array, jax.Array]:
+    """Coarse probe -> (scores [B,nprobe], cluster ids [B,nprobe])."""
+    m = _resolve(mode)
+    Nc = centroids.shape[0]
+    if valid is None:
+        valid = jnp.ones((Nc,), bool)
+    if m == "ref":
+        s = ref_mod.centroid_probe_ref(centroids, queries, valid)
+    else:
+        tile = min(tile, Nc)
+        cent = _pad_rows(centroids, tile)
+        v = _pad_rows(valid, tile, fill=False)
+        s = _probe_kernel(queries, cent, v, tile=tile,
+                          interpret=(m == "kernel_interpret"))[:, :Nc]
+    return jax.lax.top_k(s, nprobe)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
+                 window: int = 0, tile: int = 512,
+                 mode: str = DEFAULT_MODE) -> jax.Array:
+    """Decode attention [B,KVH,G,Dh] over KV [B,S,KVH,Dh]."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref_mod.flash_decode_ref(q, k, v, pos, window)
+    S = k.shape[1]
+    tile = min(tile, S)
+    if S % tile:
+        tile = S
+    return _flash_kernel(q, k, v, pos, window=window, tile=tile,
+                         interpret=(m == "kernel_interpret"))

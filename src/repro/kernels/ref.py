@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel's tests sweep shapes/dtypes and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ivf_topk_ref(pages: jax.Array, page_ids: jax.Array, page_mask: jax.Array,
+                 queries: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Masked inner-product top-k over the prefetch slab.
+
+    pages: [P, ps, d]; page_ids: [P, ps] (-1 = padding); page_mask: [P] or
+    per-query [B, P] bool (clusters allowed for each query); queries [B, d].
+    Returns (scores [B, k] fp32 desc, doc_ids [B, k] int32, -1 when empty).
+    """
+    P, ps, d = pages.shape
+    flat = pages.reshape(P * ps, d).astype(jnp.float32)
+    ids = page_ids.reshape(P * ps)
+    if page_mask.ndim == 1:
+        page_mask = page_mask[None, :]
+    vmask = jnp.repeat(page_mask, ps, axis=1) & (ids >= 0)[None, :]  # [B?,N]
+    scores = queries.astype(jnp.float32) @ flat.T               # [B, P*ps]
+    scores = jnp.where(vmask, scores, -jnp.inf)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    top_ids = jnp.where(jnp.isfinite(top_s), ids[top_i], -1)
+    return top_s, top_ids
+
+
+def centroid_probe_ref(centroids: jax.Array, queries: jax.Array,
+                       valid: Optional[jax.Array] = None) -> jax.Array:
+    """Masked centroid distances. centroids [Nc, d]; queries [B, d] -> [B, Nc]."""
+    s = queries.astype(jnp.float32) @ centroids.astype(jnp.float32).T
+    if valid is not None:
+        s = jnp.where(valid[None, :], s, -jnp.inf)
+    return s
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, window: int = 0) -> jax.Array:
+    """Single-token decode attention oracle.
+
+    q: [B, KVH, G, Dh]; k,v: [B, S, KVH, Dh]; pos: [B] (index of the new
+    token; positions > pos are masked). window > 0 = sliding window.
+    Returns [B, KVH, G, Dh] fp32.
+    """
+    B, S, KVH, Dh = k.shape
+    scale = 1.0 / math.sqrt(Dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    kp = jnp.arange(S, dtype=jnp.int32)[None, None, None, :]
+    qp = pos[:, None, None, None]
+    mask = kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))

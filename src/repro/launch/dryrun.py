@@ -1,0 +1,444 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds ShapeDtypeStruct stand-ins for every input
+(params, optimizer state, caches, batches — no device allocation),
+pjit-lowers the entry point on the production mesh, compiles it, and
+records:
+  * memory_analysis()      — proves the cell fits per-chip HBM,
+  * cost_analysis()        — per-chip FLOPs / bytes for §Roofline,
+  * collective bytes       — parsed from the optimized HLO,
+  * the roofline report row (launch/roofline.py).
+
+Results are cached as JSON under experiments/dryrun/<mesh>/ so the
+80-compile sweep is resumable (the container has one core; a full sweep
+is minutes-to-hours). Failures here are bugs in the sharding config.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-27b --shape decode_32k
+  python -m repro.launch.dryrun --all [--multi-pod] [--single-pod]
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeSuite, get_arch, get_shape, list_archs, SHAPE_SUITES
+from repro.distributed import sharding as shd
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.models import transformer as tf
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+ASSIGNED_ARCHS = (
+    "gemma2-27b", "minicpm3-4b", "granite-20b", "nemotron-4-15b",
+    "granite-moe-3b-a800m", "arctic-480b", "rwkv6-3b", "zamba2-2.7b",
+    "internvl2-1b", "musicgen-large",
+)
+
+
+# ---------------------------------------------------------------------------
+# Sharding-rule selection per cell (see DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+
+def rules_for(cfg: ArchConfig, suite: ShapeSuite, mesh: Mesh,
+              override: Optional[str] = None) -> shd.Rules:
+    if override:
+        return getattr(shd, f"RULES_{override.upper()}")
+    model_size = mesh.shape.get("model", 1)
+    if suite.entry == "train_step":
+        return shd.RULES_FSDP                      # 2-D weight sharding
+    if suite.name == "long_500k":
+        # 500k-token KV leaves no weight headroom: 2-D weight sharding +
+        # sequence-parallel KV
+        return shd.RULES_FSDP_LONG
+    # serving: weight-stationary TP unless the model cannot fit under TP
+    tp_bytes = cfg.param_count() * 2 / model_size
+    needs_fsdp = tp_bytes > 8e9                    # > half of v5e HBM
+    kv_shardable = (cfg.num_kv_heads > 0
+                    and cfg.num_kv_heads % model_size == 0)
+    long_ctx = not kv_shardable
+    if needs_fsdp:
+        return shd.RULES_FSDP_LONG if long_ctx else shd.RULES_FSDP
+    return shd.RULES_LONG_CONTEXT if long_ctx else shd.RULES_DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs with shardings; zero allocation)
+# ---------------------------------------------------------------------------
+
+
+def _with_shardings(shapes, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def _batch_first(mesh: Mesh, rules: shd.Rules, ndim: int,
+                 batch: Optional[int] = None) -> NamedSharding:
+    axes = tuple(a for a in (rules["batch"] if isinstance(rules["batch"], tuple)
+                             else (rules["batch"],)) if a in mesh.axis_names)
+    # drop trailing axes until the batch dim divides (long_500k has B=1)
+    while axes and batch is not None:
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if batch % size == 0:
+            break
+        axes = axes[:-1]
+    spec = [axes if len(axes) > 1 else (axes[0] if axes else None)]
+    spec += [None] * (ndim - 1)
+    return NamedSharding(mesh, P(*spec))
+
+
+def input_specs(cfg: ArchConfig, suite: ShapeSuite, mesh: Mesh,
+                rules: shd.Rules, *, opt_cfg: Optional[OptConfig] = None,
+                kv_quant: bool = False) -> Dict[str, Any]:
+    """All entry-point inputs as sharded ShapeDtypeStructs."""
+    B, S = suite.global_batch, suite.seq_len
+    pshapes = jax.eval_shape(
+        lambda k: tf.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pshard = shd.tree_shardings(tf.param_axes(cfg), pshapes, mesh, rules)
+    params = _with_shardings(pshapes, pshard)
+    out: Dict[str, Any] = {"params": params, "param_shardings": pshard}
+
+    fe = cfg.frontend
+    is_audio = fe is not None and fe.kind == "encodec_stub"
+    is_vlm = fe is not None and fe.kind == "vit_stub"
+    bsh = lambda nd: _batch_first(mesh, rules, nd, batch=B)
+
+    if suite.entry == "train_step":
+        opt_cfg = opt_cfg or default_opt_cfg(cfg)
+        oshapes = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), pshapes)
+        oshard = {"m": pshard, "v": pshard,
+                  "step": NamedSharding(mesh, P())}
+        out["opt_state"] = _with_shardings(oshapes, oshard)
+        out["opt_shardings"] = oshard
+        tok_shape = (B, S, fe.num_codebooks) if is_audio else (B, S)
+        if is_vlm:
+            tok_shape = (B, S - fe.num_prefix_embeddings)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32,
+                                           sharding=bsh(len(tok_shape))),
+            "labels": jax.ShapeDtypeStruct(tok_shape, jnp.int32,
+                                           sharding=bsh(len(tok_shape))),
+        }
+        if is_vlm:
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, fe.num_prefix_embeddings, fe.embed_dim), jnp.bfloat16,
+                sharding=bsh(3))
+        out["batch"] = batch
+        return out
+
+    if suite.entry == "prefill":
+        tok_shape = (B, S, fe.num_codebooks) if is_audio else (B, S)
+        if is_vlm:
+            tok_shape = (B, S - fe.num_prefix_embeddings)
+        inputs = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32,
+                                                 sharding=bsh(len(tok_shape)))}
+        if is_vlm:
+            inputs["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, fe.num_prefix_embeddings, fe.embed_dim), jnp.bfloat16,
+                sharding=bsh(3))
+        out["inputs"] = inputs
+        return out
+
+    # serve_step
+    cshapes = jax.eval_shape(lambda: tf.init_cache(cfg, B, S,
+                                                   kv_quant=kv_quant))
+    cshard = shd.tree_shardings(tf.cache_axes(cfg, kv_quant=kv_quant),
+                                cshapes, mesh, rules)
+    out["cache"] = _with_shardings(cshapes, cshard)
+    out["cache_shardings"] = cshard
+    tok_shape = (B, fe.num_codebooks) if is_audio else (B,)
+    out["inputs"] = {
+        "token": jax.ShapeDtypeStruct(tok_shape, jnp.int32,
+                                      sharding=bsh(len(tok_shape))),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32, sharding=bsh(1)),
+    }
+    return out
+
+
+def default_opt_cfg(cfg: ArchConfig) -> OptConfig:
+    # bf16 moments for very large models (fits v5e; DESIGN.md §4)
+    big = cfg.param_count() > 100e9
+    return OptConfig(moment_dtype="bfloat16" if big else "float32")
+
+
+# ---------------------------------------------------------------------------
+# Cell compilation
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(cfg: ArchConfig, suite: ShapeSuite, mesh: Mesh, *,
+               rules_override: Optional[str] = None,
+               attn_chunk: int = 1024,
+               variant: Optional[Dict[str, Any]] = None):
+    """Returns (lowered, specs, cost_thunk) for one cell.
+
+    variant: hillclimb knobs — {"accum": int, "act_mode": "model"|"none",
+    "moe_group": int, "split_cache": bool, "kv_quant": bool}.
+    """
+    variant = variant or {}
+    import dataclasses as _dc
+    if variant.get("moe_group") and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(
+            cfg.moe, group_size=variant["moe_group"]))
+    if variant.get("split_cache") is False:
+        cfg = _dc.replace(cfg, local_global_pattern=False) \
+            if False else _dc.replace(cfg, sliding_window=None,
+                                      local_global_pattern=False)
+    if variant.get("rules"):
+        rules_override = variant["rules"]
+    rules = rules_for(cfg, suite, mesh, rules_override)
+    _opt = None
+    if variant.get("moment_bf16"):
+        _opt = OptConfig(moment_dtype="bfloat16")
+    specs = input_specs(cfg, suite, mesh, rules, opt_cfg=_opt,
+                        kv_quant=bool(variant.get("kv_quant")))
+    repl = NamedSharding(mesh, P())
+
+    if suite.entry == "train_step":
+        opt_cfg = _opt or default_opt_cfg(cfg)
+        # activation TP: saved residuals shard over d_model (model axis)
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        act_spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0],
+                     None, "model")
+        # microbatch accumulation: transient activations scale 1/accum
+        accum = variant.get("accum",
+                            16 if cfg.param_count() > 100e9 else 4)
+        if variant.get("act_mode") == "none":
+            act_spec = None
+        step = make_train_step(cfg, opt_cfg, attn_chunk=attn_chunk,
+                               remat=True, remat_group=1, act_spec=act_spec,
+                               accum_steps=accum)
+        metrics_sh = {"loss": repl, "ce": repl, "aux": repl, "tokens": repl,
+                      "lr": repl, "grad_norm": repl}
+        fn = jax.jit(step,
+                     in_shardings=(specs["param_shardings"],
+                                   specs["opt_shardings"],
+                                   jax.tree.map(lambda s: s.sharding,
+                                                specs["batch"])),
+                     out_shardings=(specs["param_shardings"],
+                                    specs["opt_shardings"], metrics_sh),
+                     donate_argnums=(0, 1))
+        with mesh:
+            lowered = fn.lower(specs["params"], specs["opt_state"],
+                               specs["batch"])
+        return lowered, specs, (step, (specs["params"], specs["opt_state"],
+                                       specs["batch"]))
+
+    if suite.entry == "prefill":
+        def pf(params, inputs):
+            return tf.prefill(params, inputs, cfg, attn_chunk=attn_chunk)
+        B = suite.global_batch
+        logits_sh = _batch_first(mesh, rules_for(cfg, suite, mesh,
+                                                 rules_override), 2, batch=B)
+        # cache sharding: same rules as a decode cell at this length
+        cshapes = jax.eval_shape(
+            lambda: tf.init_cache(cfg, B, suite.seq_len))
+        cshard = shd.tree_shardings(tf.cache_axes(cfg), cshapes, mesh,
+                                    rules_for(cfg, suite, mesh,
+                                              rules_override))
+        fn = jax.jit(pf,
+                     in_shardings=(specs["param_shardings"],
+                                   jax.tree.map(lambda s: s.sharding,
+                                                specs["inputs"])),
+                     out_shardings=(logits_sh, cshard))
+        with mesh:
+            lowered = fn.lower(specs["params"], specs["inputs"])
+        return lowered, specs, (pf, (specs["params"], specs["inputs"]))
+
+    rules = rules_for(cfg, suite, mesh, rules_override)
+    seq_axis = "model" if rules.get("kv_seq") == "model" else None
+
+    kv_quant = bool(variant.get("kv_quant"))
+
+    def sv(params, cache, inputs):
+        return tf.serve_step(params, cache, inputs, cfg, seq_axis=seq_axis,
+                             kv_quant=kv_quant)
+
+    logits_sh = _batch_first(mesh, rules_for(cfg, suite, mesh,
+                                             rules_override), 2,
+                             batch=suite.global_batch)
+    fn = jax.jit(sv,
+                 in_shardings=(specs["param_shardings"],
+                               specs["cache_shardings"],
+                               jax.tree.map(lambda s: s.sharding,
+                                            specs["inputs"])),
+                 out_shardings=(logits_sh, specs["cache_shardings"]),
+                 donate_argnums=(1,))
+    with mesh:
+        lowered = fn.lower(specs["params"], specs["cache"], specs["inputs"])
+    return lowered, specs, (sv, (specs["params"], specs["cache"],
+                                 specs["inputs"]))
+
+
+def compile_cell(arch: str, shape: str, *, multi_pod: bool = False,
+                 rules_override: Optional[str] = None,
+                 variant: Optional[Dict[str, Any]] = None,
+                 verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    suite = get_shape(shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    res: Dict[str, Any] = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "rules": rules_override or "auto",
+                           "variant": variant or {}}
+    skip = suite.skip_reason(cfg)
+    if skip:
+        res["status"] = "skipped"
+        res["skip_reason"] = skip
+        return res
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    t0 = time.time()
+    try:
+        # prefill wave-splitting: a full batch of 32k-token prefills may
+        # exceed HBM for the largest archs — real serving prefills such
+        # requests in sequential waves. Auto-retry at half batch until the
+        # cell fits (recorded as wave_batch / num_waves).
+        import dataclasses as _dc
+        eff_suite = suite
+        waves = 1
+        while True:
+            lowered, _, cost_thunk = lower_cell(cfg, eff_suite, mesh,
+                                                rules_override=rules_override,
+                                                variant=variant)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+            ma = compiled.memory_analysis()
+            peak = ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            if (peak < 16e9 or suite.entry != "prefill"
+                    or eff_suite.global_batch <= 1):
+                break
+            waves *= 2
+            eff_suite = _dc.replace(eff_suite,
+                                    global_batch=eff_suite.global_batch // 2)
+            t0 = time.time()
+        res["wave_batch"] = eff_suite.global_batch
+        res["num_waves"] = waves
+        # scan-aware GLOBAL flops/bytes (see hlo_cost.py); scale wave cells
+        # back to the full batch so the roofline reflects the whole job
+        from repro.launch.hlo_cost import jaxpr_cost
+        cost_fn, cost_args = cost_thunk
+        with mesh:      # tracing hits with_sharding_constraint(P...)
+            jcost = jaxpr_cost(cost_fn, *cost_args)
+        jcost = {k: v * waves for k, v in jcost.items()}
+        hlo = compiled.as_text()
+        report = rl.build_report(
+            arch=arch, shape=shape, mesh_name=mesh_name, chips=chips,
+            cost=jcost, hlo_text=hlo,
+            model_flops=rl.model_flops_for(cfg, suite.entry, suite.seq_len,
+                                           suite.global_batch),
+            peak_memory=float(ma.argument_size_in_bytes
+                              + ma.temp_size_in_bytes))
+        res.update({
+            "status": "ok",
+            "t_lower_s": t_lower,
+            "t_compile_s": t_compile,
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_bytes": ma.argument_size_in_bytes
+                + ma.temp_size_in_bytes,
+                "fits_16gb": (ma.argument_size_in_bytes
+                              + ma.temp_size_in_bytes) < 16e9,
+            },
+            "roofline": report.row(),
+        })
+        if verbose:
+            print(f"[{mesh_name}] {arch} × {shape}: OK "
+                  f"(lower {t_lower:.1f}s compile {t_compile:.1f}s, "
+                  f"peak {res['memory']['peak_bytes']/1e9:.2f} GB/chip, "
+                  f"bottleneck={report.bottleneck})")
+    except Exception as e:  # noqa: BLE001 — failures are cell bugs, recorded
+        res["status"] = "failed"
+        res["error"] = f"{type(e).__name__}: {e}"
+        res["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[{mesh_name}] {arch} × {shape}: FAILED {res['error']}")
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Sweep driver (resumable)
+# ---------------------------------------------------------------------------
+
+
+def cell_path(out_dir: str, arch: str, shape: str, mesh_name: str) -> str:
+    return os.path.join(out_dir, mesh_name, f"{arch}__{shape}.json")
+
+
+def run_sweep(archs, shapes, *, multi_pod: bool, out_dir: str,
+              force: bool = False, rules_override: Optional[str] = None):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            path = cell_path(out_dir, arch, shape, mesh_name)
+            if os.path.exists(path) and not force:
+                with open(path) as f:
+                    prev = json.load(f)
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[{mesh_name}] {arch} × {shape}: cached "
+                          f"({prev['status']})")
+                    continue
+            res = compile_cell(arch, shape, multi_pod=multi_pod,
+                               rules_override=rules_override)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(res, f, indent=1, default=str)
+            os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--rules", default=None,
+                    help="override rule set (default/fsdp/long_context/fsdp_long)")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in SHAPE_SUITES]
+    meshes = []
+    if args.both_meshes or (not args.multi_pod and not args.single_pod):
+        meshes = [False, True] if args.all or args.both_meshes else [False]
+    if args.single_pod:
+        meshes.append(False)
+    if args.multi_pod:
+        meshes.append(True)
+    for mp in meshes:
+        run_sweep(archs, shapes, multi_pod=mp, out_dir=args.out,
+                  force=args.force, rules_override=args.rules)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Sources (see hlo_cost.py — XLA's cost_analysis counts while bodies once,
+so scanned models under-report by ~layers x accum; we fix it):
+  * ``hlo_cost.jaxpr_cost`` — GLOBAL logical FLOPs + matmul/gather traffic
+    with scan trip counts applied;
+  * ``hlo_cost.collective_bytes_corrected`` — per-chip collective bytes
+    from the post-SPMD HLO with while-loop trip multipliers.
+
+Terms (seconds):
+  compute    = flops_global / (chips * peak_flops)
+  memory     = bytes_global / (chips * hbm_bw)
+  collective = coll_bytes_per_chip / ici_bw
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.core.budget import HardwareProfile, TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|"
+                       r"f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op, by op kind.
+
+    Matches both sync ops and -start/-done pairs (counting the -start only,
+    so async collectives are not double counted).
+    """
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(.+?)\s+(%?)(" + "|".join(COLLECTIVE_OPS) +
+                      r")(-start)?(\.[0-9]+)?\(", line)
+        if not m:
+            continue
+        if re.search(r"(" + "|".join(COLLECTIVE_OPS) + r")-done", line):
+            continue
+        lhs, kind = m.group(1), m.group(3)
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+        out[kind] += nbytes
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_global: float
+    bytes_global: float
+    coll_bytes_per_chip: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float                       # 6·N(_active)·D global
+    hw: HardwareProfile = TPU_V5E
+    peak_memory_bytes: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_global / (self.chips * self.hw.peak_flops)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_global / (self.chips * self.hw.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / self.hw.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / global HLO flops — catches remat/redundancy."""
+        return self.model_flops / self.flops_global if self.flops_global \
+            else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful FLOPs / (bound time × peak)."""
+        denom = self.t_bound * self.hw.peak_flops * self.chips
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_global": self.flops_global,
+            "hlo_bytes_global": self.bytes_global,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_breakdown": self.coll_breakdown,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_memory_bytes": self.peak_memory_bytes,
+        }
+
+
+def model_flops_for(cfg: ArchConfig, entry: str, seq_len: int,
+                    global_batch: int) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D forward-only (per the 6ND convention;
+    decode D = batch tokens, one step)."""
+    n = cfg.active_param_count()
+    if entry == "train_step":
+        return 6.0 * n * seq_len * global_batch
+    if entry == "prefill":
+        return 2.0 * n * seq_len * global_batch
+    return 2.0 * n * global_batch            # serve_step: one token per seq
+
+
+def build_report(*, arch: str, shape: str, mesh_name: str, chips: int,
+                 cost: Dict, hlo_text: str, model_flops: float,
+                 peak_memory: Optional[float] = None,
+                 hw: HardwareProfile = TPU_V5E) -> RooflineReport:
+    """cost: {'flops': global, 'bytes': global} from hlo_cost.jaxpr_cost."""
+    from repro.launch.hlo_cost import collective_bytes_corrected
+    coll = collective_bytes_corrected(hlo_text)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_global=float(cost.get("flops", 0.0)),
+        bytes_global=float(cost.get("bytes", 0.0)),
+        coll_bytes_per_chip=float(sum(coll.values())),
+        coll_breakdown={k: int(v) for k, v in coll.items()},
+        model_flops=model_flops,
+        peak_memory_bytes=peak_memory, hw=hw)

@@ -1,0 +1,101 @@
+"""Serving driver: TeleRAG engine + REAL LLM decode on local devices.
+
+End-to-end RAG serving of batched requests: lookahead prefetch is
+dispatched (async) before the pre-retrieval decode loop runs on an actual
+reduced-size model, then hybrid retrieval + post-retrieval decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
+      --pipeline hyde --requests 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro.core as core
+from repro.configs import get_arch
+from repro.models import transformer as tf
+from repro.serving import (EngineConfig, KVCacheManager, PipelineExecutor,
+                           TeleRAGEngine, make_traces, sample)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--pipeline", default="hyde")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--vectors", type=int, default=60_000)
+    ap.add_argument("--clusters", type=int, default=96)
+    ap.add_argument("--nprobe", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    print(f"# building datastore ({args.vectors} x 192d, "
+          f"{args.clusters} clusters)")
+    store = core.synthetic_datastore(args.vectors, dim=192, seed=args.seed)
+    index = core.build_ivf(store, args.clusters, page_size=96,
+                           kmeans_iters=4)
+
+    arch_full = get_arch(args.arch)
+    cfg = arch_full.reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
+    kv = KVCacheManager(cfg)
+    step = jax.jit(lambda p, c, i: tf.serve_step(p, c, i, cfg))
+
+    eng = TeleRAGEngine(index, EngineConfig(
+        nprobe=args.nprobe, top_k=3, buffer_pages=512,
+        lookahead_rank=min(2 * args.nprobe, args.clusters),
+        kernel_mode="ref", cache_enabled=True, chips=4), arch_full)
+    eng.calibrate_tcc()
+    ex = PipelineExecutor(eng)
+
+    rng = np.random.default_rng(args.seed + 1)
+    q = store.embeddings[rng.choice(store.num_vectors, args.requests)]
+    q = q + 0.05 * rng.standard_normal(q.shape).astype(np.float32)
+    q /= np.linalg.norm(q, axis=-1, keepdims=True)
+
+    t0 = time.time()
+    done = 0
+    for lo in range(0, args.requests, args.batch):
+        hi = min(lo + args.batch, args.requests)
+        qb = q[lo:hi]
+        traces = make_traces(args.pipeline, hi - lo, seed=args.seed + lo)
+
+        # lookahead dispatch, then REAL pre-retrieval decode overlapping it
+        nbytes, nfetch = eng.lookahead(
+            qb, [t.pre_retrieval_tokens()[0] for t in traces])
+        lease = kv.acquire(hi - lo, 128, fresh=True)
+        tok = jnp.zeros((hi - lo,), jnp.int32)
+        gen = max(t.pre_retrieval_tokens()[0] for t in traces)
+        for t in range(min(gen, 32)):
+            logits, lease.cache = step(params, lease.cache,
+                                       {"token": tok,
+                                        "pos": jnp.full((hi - lo,), t,
+                                                        jnp.int32)})
+            tok = sample(logits)
+        kv.release(lease)
+
+        # retrieval + telemetry through the pipeline executor
+        res = ex.execute_batch(qb, traces)
+        for r in res:
+            hit = sum(rt.hits for rt in r.rounds)
+            mis = sum(rt.misses for rt in r.rounds)
+            print(f"req {r.request_id:3d} [{r.pipeline}] rounds="
+                  f"{len(r.rounds)} hit_rate={hit/max(hit+mis,1):.0%} "
+                  f"docs={[int(d[0]) for d in r.doc_ids[:1]]}")
+        done += hi - lo
+    wall = time.time() - t0
+    print(f"# {done} requests in {wall:.1f}s "
+          f"({done/wall:.2f} req/s real wall on CPU); "
+          f"h2d={eng.buffer.stats.bytes_h2d/1e6:.1f}MB "
+          f"cache_hit={eng.cache.hit_rate:.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models.transformer import (cache_axes, family_kind, forward,
+                                      init_cache, init_params, loss_fn,
+                                      param_axes, prefill, serve_step,
+                                      unembed)
+
+__all__ = [
+    "cache_axes", "family_kind", "forward", "init_cache", "init_params",
+    "loss_fn", "param_axes", "prefill", "serve_step", "unembed",
+]

@@ -1,0 +1,252 @@
+"""Common model building blocks (pure JAX, no framework).
+
+Parameters are plain pytrees (nested dicts of arrays). Every parameter is
+created through a ``Maker`` so that the *same* builder code path can
+produce (a) materialized random-init arrays, (b) ShapeDtypeStructs for
+AOT lowering, or (c) logical-axis annotations for the sharding layer —
+guaranteeing the three trees are structurally identical.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Parameter maker protocol
+# ---------------------------------------------------------------------------
+
+
+class Maker:
+    """Creates parameters; subclasses decide what a 'parameter' is."""
+
+    def __call__(self, name: str, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+                 scale: Optional[float] = None):
+        raise NotImplementedError
+
+
+class InitMaker(Maker):
+    """Materializes truncated-normal random parameters (fan-in scaled)."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.bfloat16):
+        self._key = key
+        self._dtype = dtype
+        self._i = 0
+
+    def __call__(self, name, shape, axes, scale=None):
+        assert len(shape) == len(axes), (name, shape, axes)
+        self._i += 1
+        k = jax.random.fold_in(self._key, self._i)
+        if scale is None:
+            fan_in = shape[0] if len(shape) > 1 else shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        if name.endswith("norm") or name.endswith("scale"):
+            return jnp.ones(shape, self._dtype)
+        if name.endswith("bias") or name.endswith("zeros"):
+            return jnp.zeros(shape, self._dtype)
+        x = jax.random.truncated_normal(k, -2.0, 2.0, shape, jnp.float32) * scale
+        return x.astype(self._dtype)
+
+
+class AxesMaker(Maker):
+    """Returns the logical-axis annotation instead of an array."""
+
+    def __call__(self, name, shape, axes, scale=None):
+        assert len(shape) == len(axes), (name, shape, axes)
+        return tuple(axes)
+
+
+class ShapeMaker(Maker):
+    """Returns ShapeDtypeStructs (used for AOT lowering without allocation)."""
+
+    def __init__(self, dtype=jnp.bfloat16):
+        self._dtype = dtype
+
+    def __call__(self, name, shape, axes, scale=None):
+        return jax.ShapeDtypeStruct(shape, self._dtype)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+_ACTS: dict = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def activation(name: str) -> Callable[[jax.Array], jax.Array]:
+    return _ACTS[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (supports partial rotary + large theta)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float) -> jax.Array:
+    rot_dim = int(head_dim * fraction) // 2 * 2
+    exponents = jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / max(rot_dim, 1)
+    return 1.0 / (theta ** exponents)  # [rot_dim/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, fraction: float = 1.0,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    head_dim = x.shape[-1]
+    rot_dim = int(head_dim * fraction) // 2 * 2
+    if rot_dim == 0:
+        return x
+    freqs = rope_frequencies(head_dim, fraction, theta)          # [rot/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs    # [..., seq, rot/2]
+    cos = jnp.cos(angles)[..., None, :]                          # [..., seq, 1, rot/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(mk: Maker, d_model: int, d_ff: int, gated: bool, prefix: str = "mlp"):
+    p = {"w_down": mk(f"{prefix}.w_down", (d_ff, d_model), ("mlp", "embed"))}
+    p["w_up"] = mk(f"{prefix}.w_up", (d_model, d_ff), ("embed", "mlp"))
+    if gated:
+        p["w_gate"] = mk(f"{prefix}.w_gate", (d_model, d_ff), ("embed", "mlp"))
+    return p
+
+
+def mlp_forward(p: dict, x: jax.Array, act: str, gated: bool) -> jax.Array:
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if gated:
+        # conventional SwiGLU/GeGLU ordering: act(gate) * up
+        h = activation(act)(jnp.einsum("...d,df->...f", x, p["w_gate"])) * up
+    else:
+        h = activation(act)(up)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention in pure JAX
+# ---------------------------------------------------------------------------
+
+
+def _best_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (>=1)."""
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      q_positions: jax.Array, kv_positions: jax.Array,
+                      window: Optional[int], softcap_val: Optional[float],
+                      kv_valid_len: Optional[jax.Array] = None,
+                      chunk: int = 1024, q_chunk: int = 256) -> jax.Array:
+    """Flash-style causal attention, tiled over BOTH query and KV dims.
+
+    q: [B, Sq, KVH, G, Dh] (grouped query heads); k,v: [B, Skv, KVH, Dh].
+    window: sliding-window size (None/0 => global); may be a traced
+    per-layer scalar (gemma2 local/global alternation in one scanned body).
+
+    Memory discipline (the whole point of this function):
+      * live scores are [B, KVH, G, q_chunk, kv_chunk] — never Sq x Skv;
+      * K/V stay in their storage dtype; the MXU accumulates fp32 via
+        preferred_element_type (no fp32 materialization of the cache);
+      * each q-chunk body is jax.checkpoint'ed so the backward pass
+        recomputes scores instead of saving them per scan step.
+    """
+    B, Sq, KVH, G, Dh = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(Dh)
+
+    kv_c = _best_chunk(Skv, chunk)
+    n_kv = Skv // kv_c
+    q_c = _best_chunk(Sq, q_chunk)
+    n_q = Sq // q_c
+
+    k_c = jnp.moveaxis(k.reshape(B, n_kv, kv_c, KVH, Dh), 1, 0)
+    v_c = jnp.moveaxis(v.reshape(B, n_kv, kv_c, KVH, Dh), 1, 0)
+    kp_c = kv_positions.reshape(n_kv, kv_c)
+
+    def q_body(_, xs):
+        qc, qpc = xs                              # [B,q_c,KVH,G,Dh], [q_c]
+        q32 = qc.astype(jnp.float32) * scale
+
+        def kv_body(carry, xs2):
+            m_prev, l_prev, acc = carry
+            kc, vc, kpc = xs2
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q32, kc,
+                           preferred_element_type=jnp.float32)
+            s = softcap(s, softcap_val)
+            qp = qpc[None, None, None, :, None]
+            kp = kpc[None, None, None, None, :]
+            mask = kp <= qp                       # causal
+            if window is not None:
+                w = jnp.asarray(window, jnp.int32)
+                mask &= jnp.where(w > 0, kp > qp - w, True)
+            if kv_valid_len is not None:
+                mask &= kp < kv_valid_len[:, None, None, None, None]
+            s = jnp.where(mask, s, -jnp.inf)
+            m_cur = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m_prev, m_cur)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+            corr = jnp.where(jnp.isfinite(m_prev),
+                             jnp.exp(m_prev - m_safe), 0.0)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KVH, G, q_c), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, q_c), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, q_c, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (k_c, v_c, kp_c))
+        out = acc / jnp.maximum(l[..., None], 1e-20)
+        return None, jnp.transpose(out, (0, 3, 1, 2, 4)).astype(q.dtype)
+
+    q_b = jnp.moveaxis(q.reshape(B, n_q, q_c, KVH, G, Dh), 1, 0)
+    qp_b = q_positions.reshape(n_q, q_c)
+    _, outs = jax.lax.scan(jax.checkpoint(q_body), None, (q_b, qp_b))
+    # outs: [n_q, B, q_c, KVH, G, Dh] -> [B, Sq, KVH, G, Dh]
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KVH, G, Dh)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-mean causal LM loss in fp32. logits [..., V]; labels [...]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,129 @@
+"""Multi-head latent attention (DeepSeek-V2 / MiniCPM3).
+
+Train/prefill use the expanded formulation; decode uses the *absorbed*
+formulation, caching only the compressed latent ``c_kv`` (kv_lora_rank)
+and the shared rotary key ``k_pe`` (qk_rope_head_dim) per token — the KV
+cache is ~an order of magnitude smaller than GQA at the same width.
+
+Absorbed decode math (per head h):
+  score(t) = (q_nope_h · W_uk_h c_t) + (q_pe_h · k_pe_t)
+           = (W_uk_hᵀ q_nope_h) · c_t + q_pe_h · k_pe_t
+  out_h    = Σ_t p_t (W_uv_hᵀ c_t) = W_uv_hᵀ (Σ_t p_t c_t)
+so both the key expansion and value expansion are absorbed into
+per-head projections of the query / the attention-weighted latent.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Maker, apply_rope, chunked_attention
+
+
+def mla_params(mk: Maker, cfg: ArchConfig, prefix: str = "mla") -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": mk(f"{prefix}.w_dq", (d, m.q_lora_rank), ("embed", None)),
+        "q_norm": mk(f"{prefix}.q_norm", (m.q_lora_rank,), (None,)),
+        "w_uq": mk(f"{prefix}.w_uq", (m.q_lora_rank, H, qk), (None, "heads", None)),
+        # down-projection emits [c_kv | k_pe]
+        "w_dkv": mk(f"{prefix}.w_dkv", (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                    ("embed", None)),
+        "kv_norm": mk(f"{prefix}.kv_norm", (m.kv_lora_rank,), (None,)),
+        "w_uk": mk(f"{prefix}.w_uk", (m.kv_lora_rank, H, m.qk_nope_head_dim),
+                   (None, "heads", None)),
+        "w_uv": mk(f"{prefix}.w_uv", (m.kv_lora_rank, H, m.v_head_dim),
+                   (None, "heads", None)),
+        "wo": mk(f"{prefix}.wo", (H, m.v_head_dim, d), ("heads", None, "embed")),
+    }
+
+
+def _latents(p: dict, x: jax.Array, cfg: ArchConfig, positions: jax.Array):
+    """Compute (q_nope, q_pe, c_kv, k_pe) for a sequence."""
+    from repro.models.layers import rms_norm
+    m = cfg.mla
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_pe = apply_rope(q[..., m.qk_nope_head_dim:], positions, theta=cfg.rope_theta)
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv = rms_norm(dkv[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope(dkv[..., None, m.kv_lora_rank:], positions, theta=cfg.rope_theta)
+    return q_nope, q_pe, c_kv, k_pe[..., 0, :]
+
+
+def mla_forward(p: dict, x: jax.Array, cfg: ArchConfig, *, positions: jax.Array,
+                attn_chunk: int = 1024) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Expanded MLA for train/prefill. Returns (out, (c_kv, k_pe)) for caching."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_pe, c_kv, k_pe = _latents(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    # assemble full q/k with shared rotary part broadcast over heads
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, m.qk_rope_head_dim))],
+        axis=-1)
+    # pad v to qk dim so we can reuse the shared chunked-attention core,
+    # then slice back (v_head_dim <= qk dim always holds for our configs)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk - m.v_head_dim)))
+    out = chunked_attention(
+        q_full[:, :, :, None, :].reshape(B, S, H, 1, qk),
+        k_full, v_pad,
+        q_positions=positions, kv_positions=positions,
+        window=None, softcap_val=cfg.attn_logit_softcap,
+        chunk=min(attn_chunk, S))
+    out = out.reshape(B, S, H, qk)[..., :m.v_head_dim]
+    # MLA scores use 1/sqrt(qk_dim); chunked_attention scaled by 1/sqrt(qk) already
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (c_kv, k_pe)
+
+
+def mla_decode(p: dict, x: jax.Array, cfg: ArchConfig, *,
+               cache_ckv: jax.Array, cache_kpe: jax.Array, pos: jax.Array,
+               kv_seq_spec=None,
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed one-token decode.
+
+    x: [B,1,d]; cache_ckv: [B,Smax,R]; cache_kpe: [B,Smax,rope_dim]; pos: [B].
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    Smax = cache_ckv.shape[1]
+    positions = pos[:, None]
+    q_nope, q_pe, c_kv_new, k_pe_new = _latents(p, x, cfg, positions)
+
+    def put(cache, new):
+        def one(c, n, i):
+            return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), (i, 0))
+        return jax.vmap(one)(cache, new, pos)
+    cache_ckv = put(cache_ckv, c_kv_new)
+    cache_kpe = put(cache_kpe, k_pe_new)
+
+    # absorb: q_abs[b,h,r] = Σ_k q_nope[b,h,k] W_uk[r,h,k]
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])[:, 0]      # [B,H,R]
+    q_pe0 = q_pe[:, 0]                                                  # [B,H,rope]
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = (jnp.einsum("bhr,btr->bht", q_abs.astype(jnp.float32),
+                    cache_ckv.astype(jnp.float32))
+         + jnp.einsum("bhk,btk->bht", q_pe0.astype(jnp.float32),
+                      cache_kpe.astype(jnp.float32))) * scale
+    if kv_seq_spec is not None:
+        s = jax.lax.with_sharding_constraint(s, kv_seq_spec)
+    t_idx = jnp.arange(Smax, dtype=jnp.int32)[None, None, :]
+    mask = t_idx <= pos[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    pattn = jax.nn.softmax(s, axis=-1)
+    latent = jnp.einsum("bht,btr->bhr", pattn, cache_ckv.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhk->bhk", latent, p["w_uv"].astype(jnp.float32))
+    out = out.astype(x.dtype)[:, None]                                  # [B,1,H,v]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_ckv, cache_kpe

@@ -1,0 +1,19 @@
+from repro.serving.engine import (EngineConfig, RequestResult, RoundTelemetry,
+                                  TeleRAGEngine)
+from repro.serving.kv_cache import CacheLease, KVCacheManager
+from repro.serving.pipelines import (GlobalBatchReport,
+                                     MultiReplicaOrchestrator,
+                                     PipelineExecutor, PIPELINE_NAMES)
+from repro.serving.sampler import sample
+from repro.serving.trace import (PIPELINES, RequestTrace, StageTrace,
+                                 calibration_windows, make_trace, make_traces)
+
+__all__ = [
+    "EngineConfig", "RequestResult", "RoundTelemetry", "TeleRAGEngine",
+    "CacheLease", "KVCacheManager",
+    "GlobalBatchReport", "MultiReplicaOrchestrator", "PipelineExecutor",
+    "PIPELINE_NAMES",
+    "sample",
+    "PIPELINES", "RequestTrace", "StageTrace", "calibration_windows",
+    "make_trace", "make_traces",
+]

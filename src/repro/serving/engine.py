@@ -1,0 +1,260 @@
+"""TeleRAG serving engine (paper §4, Fig. 6/7).
+
+Resource owner + retrieval primitives for one replica ("GPU"):
+prefetch buffer, cluster cache, budget policy, LLM backend, and the
+timing model that composes measured byte/hit-rate telemetry into
+modeled wall-clock per the paper's overlap semantics:
+
+    t1 = max(t_llm_window, t_prefetch)          (§4.1 / App. C)
+    t2 = max(t_host_search(misses), t_dev_search(hits)) + t_merge
+
+Three execution modes cover the paper's comparison systems:
+  * "telerag"        — lookahead prefetch + hybrid search (ours)
+  * "cpu_baseline"   — retrieval entirely on host (Faiss-CPU baseline)
+  * "runtime_fetch"  — fetch-on-demand at retrieval time (§3.2, Fig. 5)
+
+Quantities that are *measured* on this container: bytes moved, cluster
+hit/miss sets, search results, scheduler quality. Wall-clock is modeled
+from the HardwareProfile (CPU-only container; see DESIGN.md §7) — except
+host search, whose per-cluster cost t_cc can be measured and plugged in.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import budget as budget_mod
+from repro.core.budget import HardwareProfile, TPU_V5E
+from repro.core.cache import CacheConfig, ClusterCache
+from repro.core.datastore import PagedClusters
+from repro.core.embedder import synthetic_rewrite
+from repro.core.hybrid_search import RetrievalResult, host_search, hybrid_retrieve
+from repro.core.ivf import IVFIndex, probe
+from repro.core.lookahead import plan_batched_prefetch
+from repro.core.prefetch_buffer import PrefetchBuffer
+
+
+@dataclass
+class EngineConfig:
+    nprobe: int = 256
+    top_k: int = 3
+    buffer_pages: int = 1024
+    prefetch_budget_bytes: Optional[int] = None   # None => Appendix-C policy
+    lookahead_rank: int = 512                     # clusters ranked by q_in
+    mode: str = "telerag"                         # telerag|cpu_baseline|runtime_fetch
+    kernel_mode: str = "auto"
+    cache: CacheConfig = field(default_factory=CacheConfig)
+    cache_enabled: bool = False                   # paper: off on single GPU
+    hw: HardwareProfile = TPU_V5E
+    chips: int = 1
+    t_cc: Optional[float] = None                  # None => bytes/host_mem_bw
+    seed: int = 0
+
+
+@dataclass
+class RoundTelemetry:
+    round_index: int
+    batch: int
+    gen_tokens: int
+    t_llm_window: float = 0.0
+    bytes_prefetched: int = 0
+    t_prefetch: float = 0.0
+    hits: int = 0
+    misses: int = 0
+    t_host_search: float = 0.0
+    t_dev_search: float = 0.0
+    t_merge: float = 0.0
+
+    # composed stage latencies under each system's overlap semantics
+    def t_telerag(self) -> float:
+        t1 = max(self.t_llm_window, self.t_prefetch)
+        t2 = max(self.t_host_search, self.t_dev_search) + self.t_merge
+        return t1 + t2
+
+    def t_cpu_baseline(self, t_cc: float) -> float:
+        return self.t_llm_window + (self.hits + self.misses) * t_cc
+
+    def t_runtime_fetch(self, page_bytes_per_cluster: float,
+                        link_bw: float) -> float:
+        nb = (self.hits + self.misses) * page_bytes_per_cluster
+        return (self.t_llm_window + nb / link_bw
+                + self.t_dev_search + self.t_merge)
+
+
+@dataclass
+class RequestResult:
+    request_id: int
+    pipeline: str
+    doc_ids: List[np.ndarray] = field(default_factory=list)
+    rounds: List[RoundTelemetry] = field(default_factory=list)
+
+    def latency(self, mode: str, *, t_cc: float, cluster_bytes: float,
+                link_bw: float, tail_gen_s: float = 0.0) -> float:
+        tot = tail_gen_s
+        for r in self.rounds:
+            if mode == "telerag":
+                tot += r.t_telerag()
+            elif mode == "cpu_baseline":
+                tot += r.t_cpu_baseline(t_cc)
+            elif mode == "runtime_fetch":
+                tot += r.t_runtime_fetch(cluster_bytes, link_bw)
+            else:
+                raise KeyError(mode)
+        return tot
+
+
+class TeleRAGEngine:
+    """Single-replica engine: prefetch buffer + cache + hybrid retrieval."""
+
+    def __init__(self, index: IVFIndex, cfg: EngineConfig,
+                 arch: Optional[ArchConfig] = None):
+        self.index = index
+        self.cfg = cfg
+        self.arch = arch
+        self.buffer = PrefetchBuffer(index.paged, cfg.buffer_pages)
+        self.cache = ClusterCache(cfg.cache)
+        self._rng = np.random.default_rng(cfg.seed)
+        self._measured_tcc: Optional[float] = None
+
+    # ---- budget -----------------------------------------------------------
+    def prefetch_budget(self, gen_tokens: Sequence[int], batch: int) -> int:
+        if self.cfg.prefetch_budget_bytes is not None:
+            return self.cfg.prefetch_budget_bytes
+        if self.arch is None:
+            return self.buffer.capacity_bytes // 2
+        return budget_mod.optimal_budget(
+            self.arch, self.cfg.hw, gen_tokens=list(gen_tokens) or [0],
+            batch=batch, nprobe=self.cfg.nprobe, t_cc=self.effective_tcc(),
+            chips=self.cfg.chips,
+            hbm_headroom_bytes=float(self.buffer.capacity_bytes))
+
+    def effective_tcc(self) -> float:
+        if self._measured_tcc is not None:
+            return self._measured_tcc
+        if self.cfg.t_cc is not None:
+            return self.cfg.t_cc
+        avg_cluster_bytes = float(np.mean(self.index.paged.all_cluster_bytes()))
+        return budget_mod.host_cluster_search_seconds(avg_cluster_bytes,
+                                                      self.cfg.hw)
+
+    def calibrate_tcc(self, n_clusters: int = 16) -> float:
+        """Measure real host per-cluster search cost on this machine."""
+        q = self._rng.standard_normal(self.index.dim).astype(np.float32)
+        cs = list(range(min(n_clusters, self.index.num_clusters)))
+        t0 = time.perf_counter()
+        host_search(self.index.paged, cs, q, k=8)
+        self._measured_tcc = (time.perf_counter() - t0) / len(cs)
+        return self._measured_tcc
+
+    # ---- timing primitives --------------------------------------------------
+    def llm_window_seconds(self, gen_tokens: int, batch: int,
+                           kv_len: int = 1024) -> float:
+        if self.arch is None or gen_tokens == 0:
+            return 0.0
+        per = budget_mod.decode_step_seconds(self.arch, self.cfg.hw,
+                                             batch=batch, kv_len=kv_len,
+                                             chips=self.cfg.chips)
+        return per * gen_tokens
+
+    def _dev_search_seconds(self, pages_searched: int) -> float:
+        nb = pages_searched * self.buffer.page_nbytes
+        return nb / (self.cfg.hw.hbm_bw * self.cfg.chips) + 5e-6
+
+    # ---- primitives ---------------------------------------------------------
+    def lookahead(self, q_in: np.ndarray, gen_tokens: Sequence[int],
+                  ) -> Tuple[int, int]:
+        """Plan + dispatch prefetch for a micro-batch of q_in embeddings.
+
+        Returns (bytes_planned, clusters_fetched). Async by construction:
+        device_put/scatter dispatch returns before the copy completes, so
+        the subsequent decode steps overlap with it (the real mechanism,
+        not only the model)."""
+        if self.cfg.mode != "telerag":
+            return 0, 0
+        B = q_in.shape[0]
+        bud = self.prefetch_budget(gen_tokens, B)
+        ranked = probe(q_in, self.index, min(self.cfg.lookahead_rank,
+                                             self.index.num_clusters))
+        # cache makes room first so the planner sees true free pages
+        plan, _ = plan_batched_prefetch(
+            list(ranked), self.index.paged, budget_bytes=bud,
+            resident=self.buffer.resident_clusters(),
+            free_pages=self.buffer.free_pages())
+        if plan.pages_planned > self.buffer.free_pages():
+            self.cache.make_room(self.buffer, plan.pages_planned)
+        loaded, rejected = self.buffer.load_clusters(plan.fetch)
+        if rejected:
+            self.cache.make_room(self.buffer,
+                                 sum(int(self.index.paged.cluster_num_pages[c])
+                                     for c in rejected))
+            self.buffer.load_clusters(rejected)
+        self.cache.on_fetched(plan.fetch)
+        return plan.bytes_planned, len(plan.fetch)
+
+    def retrieve(self, q_out: np.ndarray) -> RetrievalResult:
+        ranked_out = probe(q_out, self.index, self.cfg.nprobe)
+        if self.cfg.mode == "cpu_baseline":
+            # all clusters on host
+            res_s, res_i, miss = [], [], []
+            for b in range(q_out.shape[0]):
+                cs = [int(c) for c in ranked_out[b]]
+                s, i = host_search(self.index.paged, cs, q_out[b],
+                                   self.cfg.top_k)
+                res_s.append(s)
+                res_i.append(i)
+                miss.append(cs)
+            return RetrievalResult(doc_ids=np.stack(res_i),
+                                   scores=np.stack(res_s),
+                                   hit_clusters=[[] for _ in miss],
+                                   missed_clusters=miss,
+                                   nprobe=self.cfg.nprobe)
+        if self.cfg.mode == "runtime_fetch":
+            # fetch exactly the probed clusters now (not overlapped)
+            need = sorted(set(int(c) for r in ranked_out for c in r))
+            pages = sum(int(self.index.paged.cluster_num_pages[c])
+                        for c in need if not self.buffer.is_resident(c))
+            self.cache.make_room(self.buffer, pages)
+            self.buffer.load_clusters(need)
+        res = hybrid_retrieve(self.buffer, q_out, ranked_out,
+                              k=self.cfg.top_k,
+                              kernel_mode=self.cfg.kernel_mode)
+        used = [c for h in res.hit_clusters for c in h]
+        self.cache.record_lookup([c for r in ranked_out for c in r],
+                                 self.buffer.resident_clusters())
+        self.cache.round_update(used)
+        return res
+
+    def end_batch(self) -> None:
+        """Post-batch consolidation (paper App. D reproducibility rule)."""
+        if self.cfg.cache_enabled:
+            self.cache.consolidate(self.buffer)
+        else:
+            evict = list(self.buffer.resident_clusters())
+            self.buffer.evict_clusters(evict)
+            self.cache.hotness.clear()
+
+    # ---- fault tolerance ------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {
+            "hotness": dict(self.cache.hotness),
+            "resident": sorted(self.buffer.resident_clusters()),
+            "stats": (self.buffer.stats.bytes_h2d, self.buffer.stats.pages_h2d,
+                      self.buffer.stats.rounds),
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Rebuild device state from a snapshot (replica restart)."""
+        self.buffer = PrefetchBuffer(self.index.paged, self.cfg.buffer_pages)
+        self.cache = ClusterCache(self.cfg.cache)
+        self.buffer.load_clusters(snap["resident"])
+        self.cache.hotness.update({int(k): v for k, v in
+                                   snap["hotness"].items()})
+        b, p, r = snap["stats"]
+        self.buffer.stats.bytes_h2d = b
+        self.buffer.stats.pages_h2d = p
+        self.buffer.stats.rounds = r

@@ -1,0 +1,52 @@
+"""KV/state cache manager for the serving engine.
+
+Allocates one decode cache per (batch, max_len) bucket and recycles it
+across requests (zeroed logically via position resets — stale entries are
+masked by per-sequence ``pos``). For SSM archs the "cache" is the O(1)
+recurrent state, which must be explicitly zeroed between requests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+
+
+@dataclass
+class CacheLease:
+    cache: dict
+    batch: int
+    max_len: int
+
+
+class KVCacheManager:
+    def __init__(self, cfg: ArchConfig, dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.dtype = dtype
+        self._pool: Dict[Tuple[int, int], dict] = {}
+
+    def acquire(self, batch: int, max_len: int, *, fresh: bool = False,
+                ) -> CacheLease:
+        key = (batch, max_len)
+        cache = self._pool.pop(key, None)
+        if cache is None:
+            cache = tf.init_cache(self.cfg, batch, max_len, self.dtype)
+        elif fresh or tf.family_kind(self.cfg) != "attn":
+            # recurrent state must not leak across requests; attention
+            # caches are masked by pos so zeroing is optional
+            cache = jax.tree.map(lambda a: jnp.zeros_like(a), cache)
+        return CacheLease(cache=cache, batch=batch, max_len=max_len)
+
+    def release(self, lease: CacheLease) -> None:
+        self._pool[(lease.batch, lease.max_len)] = lease.cache
+
+    def nbytes(self, batch: int, max_len: int) -> int:
+        shapes = jax.eval_shape(
+            lambda: tf.init_cache(self.cfg, batch, max_len, self.dtype))
+        return sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(shapes))

@@ -1,0 +1,21 @@
+"""Token sampling for the decode loop."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, key: Optional[jax.Array] = None, *,
+           temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """logits [..., V] -> token ids [...]. temperature 0 = greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    assert key is not None, "temperature sampling needs a PRNG key"
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device; only launch/dryrun.py forces 512 placeholder devices."""
+
+import numpy as np
+import pytest
+
+import repro.core as core
+
+
+@pytest.fixture(scope="session")
+def small_store():
+    return core.synthetic_datastore(20_000, dim=128, seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_index(small_store):
+    return core.build_ivf(small_store, 64, page_size=64, kmeans_iters=4)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+def unit_queries(store, rng, n, jitter=0.1):
+    q = store.embeddings[rng.choice(len(store.embeddings), n)]
+    q = q + jitter * rng.standard_normal(q.shape).astype(np.float32)
+    return q / np.linalg.norm(q, axis=-1, keepdims=True)

@@ -1,0 +1,176 @@
+"""TeleRAG core unit tests: IVF, lookahead planner, buffer, cache, budget."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.core as core
+from repro.configs import get_arch
+from tests.conftest import unit_queries
+
+
+def test_probe_matches_bruteforce(small_store, small_index, rng):
+    q = unit_queries(small_store, rng, 5)
+    ids = core.probe(q, small_index, 8)
+    sims = q @ small_index.centroids.T
+    for b in range(5):
+        expect = set(np.argsort(-sims[b])[:8].tolist())
+        assert set(ids[b].tolist()) == expect
+
+
+def test_paged_layout_roundtrip(small_store, small_index):
+    paged = small_index.paged
+    # every vector appears exactly once across cluster pages
+    seen = []
+    for c in range(paged.num_clusters):
+        ids = paged.cluster_page_ids(c).reshape(-1)
+        ids = ids[ids >= 0]
+        seen.append(ids)
+        # vectors stored under c must be assigned to c
+        assert np.all(small_index.assignments[ids] == c)
+        # page content matches source embeddings
+        flat = paged.cluster_pages(c).reshape(-1, paged.dim)
+        np.testing.assert_allclose(flat[:len(ids)][np.argsort(ids.argsort())],
+                                   flat[:len(ids)])
+    allv = np.concatenate(seen)
+    assert len(allv) == small_store.num_vectors
+    assert len(np.unique(allv)) == small_store.num_vectors
+
+
+def test_plan_prefetch_budget_and_skip_rule(small_index):
+    paged = small_index.paged
+    ranked = list(range(20))
+    budget = int(paged.cluster_bytes(0) * 3.5)
+    plan = core.plan_prefetch(ranked, paged, budget_bytes=budget,
+                              resident=set(), free_pages=10_000)
+    assert plan.bytes_planned <= budget
+    # skip-whole-cluster rule: skipped clusters would each have overflowed
+    rem = budget
+    for c in ranked:
+        nb = paged.cluster_bytes(c)
+        if c in plan.fetch:
+            rem -= nb
+        elif c in plan.skipped:
+            assert nb > rem or paged.cluster_num_pages[c] > 10_000
+    # resident clusters are free
+    plan2 = core.plan_prefetch(ranked, paged, budget_bytes=budget,
+                               resident={ranked[0]}, free_pages=10_000)
+    assert ranked[0] in plan2.resident_hits
+    assert plan2.bytes_planned <= budget
+
+
+def test_batched_plan_shares_clusters(small_index):
+    paged = small_index.paged
+    ranked = [[1, 2, 3], [1, 2, 4], [1, 5, 6]]
+    budget = paged.cluster_bytes(1) * 6
+    plan, covered = core.plan_batched_prefetch(ranked, paged,
+                                               budget_bytes=budget,
+                                               resident=set(),
+                                               free_pages=10_000)
+    assert plan.fetch.count(1) == 1           # shared cluster fetched once
+    assert covered.sum() >= 3                 # all three covered cluster 1
+
+
+def test_buffer_load_evict_consistency(small_index):
+    buf = core.PrefetchBuffer(small_index.paged, num_pages=64)
+    loaded, rejected = buf.load_clusters([0, 1, 2])
+    assert loaded == [0, 1, 2] and not rejected
+    used = buf.used_pages
+    assert used == sum(int(small_index.paged.cluster_num_pages[c])
+                       for c in (0, 1, 2))
+    # evict then ensure the device mask excludes it after flush
+    buf.evict_clusters([1])
+    buf.flush_invalidations()
+    pc = np.asarray(buf.page_cluster)
+    assert not np.any(pc == 1)
+    assert buf.free_pages() == 64 - used + int(
+        small_index.paged.cluster_num_pages[1])
+    # refetch into (possibly different) slots; no duplicate pages
+    buf.load_clusters([1])
+    pc = np.asarray(buf.page_cluster)
+    assert (pc == 1).sum() == int(small_index.paged.cluster_num_pages[1])
+
+
+def test_buffer_rejects_whole_cluster_when_full(small_index):
+    npg0 = int(small_index.paged.cluster_num_pages[0])
+    buf = core.PrefetchBuffer(small_index.paged, num_pages=npg0)
+    loaded, rejected = buf.load_clusters([0])
+    assert loaded == [0]
+    loaded, rejected = buf.load_clusters([1])
+    assert rejected == [1] and 1 not in buf.resident
+
+
+def test_cache_eq6_hotness():
+    cache = core.ClusterCache(core.CacheConfig(decay=2.0, h_init=1.0,
+                                               h_inc=1.0))
+    cache.on_fetched([1, 2])
+    cache.round_update([1])            # 1 used, 2 not
+    assert cache.hotness[1] == pytest.approx(1.0 / 2 + 1.0)
+    assert cache.hotness[2] == pytest.approx(0.5)
+    cache.round_update([])
+    assert cache.hotness[1] == pytest.approx(0.75)
+
+
+def test_cache_consolidate_quota(small_index):
+    buf = core.PrefetchBuffer(small_index.paged, num_pages=64)
+    cache = core.ClusterCache(core.CacheConfig(fraction=0.25))
+    buf.load_clusters(list(range(8)))
+    cache.on_fetched(range(8))
+    cache.round_update([0, 1])
+    cache.consolidate(buf)
+    assert buf.used_pages <= cache.quota_pages(buf)
+    # hottest survive
+    if buf.resident:
+        assert 0 in buf.resident or 1 in buf.resident
+
+
+def test_budget_case1_and_headroom():
+    cfg = get_arch("llama3-8b")
+    hw = core.TPU_V5E
+    b = core.optimal_budget(cfg, hw, gen_tokens=[100], batch=1, chips=8,
+                            hbm_headroom_bytes=5e9)
+    t_llm = core.generation_window_seconds(cfg, hw, gen_tokens=[100],
+                                           batch=1, chips=8)
+    assert b == min(int(hw.host_link_bw * t_llm), int(5e9))
+    # rwkv decodes faster per token => smaller window => smaller budget
+    b_rwkv = core.optimal_budget(get_arch("rwkv6-3b"), hw, gen_tokens=[100],
+                                 batch=1, chips=8, hbm_headroom_bytes=5e9)
+    assert b_rwkv <= b
+
+
+def test_budget_case2_interior_minimum():
+    # a steep miss-rate curve rewards prefetching past the window
+    fn = core.empirical_miss_curve([0, 1e9, 2e9, 4e9], [0.0, 0.8, 0.97, 1.0])
+    b2 = core.case2_budget(fn, link_bw=64e9, nprobe=256, t_cc=2e-3,
+                           b_max=4e9)
+    assert b2 is not None and 0 < b2 <= 4e9
+
+
+def test_hybrid_retrieve_bruteforce(small_store, small_index, rng):
+    q = unit_queries(small_store, rng, 6)
+    ranked = core.probe(q, small_index, 12)
+    buf = core.PrefetchBuffer(small_index.paged, num_pages=256)
+    plan, _ = core.plan_batched_prefetch(
+        list(core.probe(q, small_index, 24)), small_index.paged,
+        budget_bytes=80 * small_index.paged.page_nbytes(),
+        resident=set(), free_pages=buf.free_pages())
+    buf.load_clusters(plan.fetch)
+    res = core.hybrid_retrieve(buf, q, ranked, k=5, kernel_mode="ref")
+    for b in range(len(q)):
+        allowed = set(int(c) for c in ranked[b])
+        mask = np.isin(small_index.assignments, list(allowed))
+        sims = small_store.embeddings[mask] @ q[b]
+        ids = np.where(mask)[0]
+        expect = set(ids[np.argsort(-sims)[:5]].tolist())
+        got = set(int(x) for x in res.doc_ids[b] if x >= 0)
+        assert got == expect, (b, got, expect)
+
+
+def test_overlap_decreases_with_sigma(small_store, small_index, rng):
+    q = unit_queries(small_store, rng, 16)
+    covs = []
+    for sigma in (0.05, 0.3, 0.8):
+        qo = core.synthetic_rewrite(q, sigma, np.random.default_rng(1))
+        covs.append(core.coverage(small_index, q, qo, 8))
+    assert covs[0] > covs[1] > covs[2]
+    assert core.coverage(small_index, q, q.copy(), 8) == 1.0

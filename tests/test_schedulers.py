@@ -1,0 +1,70 @@
+"""Prefetching scheduler + cache-aware scheduler behaviour (paper §4.2)."""
+
+import numpy as np
+
+import repro.core as core
+
+
+def test_group_queries_exact_cover():
+    rng = np.random.default_rng(0)
+    emb = rng.standard_normal((13, 16)).astype(np.float32)
+    groups = core.group_queries(emb, micro_batch=4)
+    flat = sorted(i for g in groups for i in g)
+    assert flat == list(range(13))
+    assert all(len(g) <= 4 for g in groups)
+
+
+def test_group_queries_groups_similar():
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal(16).astype(np.float32)
+    b = rng.standard_normal(16).astype(np.float32)
+    emb = np.stack([a + 0.01 * rng.standard_normal(16) for _ in range(4)]
+                   + [b + 0.01 * rng.standard_normal(16) for _ in range(4)]
+                   ).astype(np.float32)
+    order = rng.permutation(8)
+    groups = core.group_queries(emb[order], micro_batch=4)
+    for g in groups:
+        fams = {int(order[i] < 4) for i in g}
+        assert len(fams) == 1, (groups, order)
+
+
+def test_assignment_prefers_overlap_and_caps_load():
+    batches = [set(range(0, 10)), set(range(10, 20)), set(range(0, 10)),
+               set(range(10, 20))]
+    caches = [set(range(0, 10)), set(range(10, 20))]
+    out = core.assign_to_replicas(batches, caches)
+    assert len(out) == 4
+    loads = {}
+    for a in out:
+        loads[a.replica] = loads.get(a.replica, 0) + 1
+        if a.overlap > 0:
+            # routed to the replica holding its clusters
+            assert (a.replica == 0) == (a.batch_index in (0, 2))
+    assert max(loads.values()) <= 2
+
+
+def test_straggler_requeue():
+    from repro.core.schedulers import Assignment, ReplicaHealth
+    h = ReplicaHealth(deadline_s=1.0)
+    h.heartbeat(0, now=0.0)
+    h.heartbeat(1, now=5.0)
+    assert h.healthy([0, 1], now=5.5) == [1]
+    assigns = [Assignment(0, 0, 3), Assignment(1, 1, 2)]
+    alive, requeue = h.requeue_straggler_batches(assigns, dead={0})
+    assert requeue == [0] and [a.batch_index for a in alive] == [1]
+
+
+def test_scheduler_improves_hit_rate(small_store, small_index, rng):
+    """End-to-end: grouping similar queries should not hurt (and usually
+    helps) shared-cluster coverage under a split budget."""
+    from tests.conftest import unit_queries
+    base = unit_queries(small_store, rng, 4)
+    emb = np.concatenate([base + 0.02 * rng.standard_normal(base.shape)
+                          for _ in range(4)]).astype(np.float32)
+    emb /= np.linalg.norm(emb, axis=-1, keepdims=True)
+    ranked = [core.probe(emb[i], small_index, 8)[0] for i in range(16)]
+    groups = core.group_queries(emb, 4)
+    gain_sched = core.grouping_shared_cluster_gain(ranked, groups, top=8)
+    naive = [list(range(i, i + 4)) for i in range(0, 16, 4)]
+    gain_naive = core.grouping_shared_cluster_gain(ranked, naive, top=8)
+    assert gain_sched >= gain_naive - 1e-9
