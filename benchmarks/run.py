@@ -14,7 +14,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names to run")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI guard: run a small fast subset at --quick "
+                         "sizes so the perf scripts cannot silently rot")
     args = ap.parse_args()
+    if args.smoke:
+        args.quick = True
+        if args.only is None:
+            args.only = "overlap,sched"
 
     from benchmarks import (bench_breakdown, bench_budget, bench_hitrate,
                             bench_kernels, bench_latency, bench_nprobe,

@@ -16,8 +16,14 @@ import numpy as np
 
 import repro.core as core
 from repro.configs import get_arch
+from repro.core.schedulers import TeleRAGScheduler
 from repro.serving import (EngineConfig, MultiReplicaOrchestrator,
-                           make_traces)
+                           latency_summary, make_traces)
+
+
+def latency_line(rep):
+    """Per-request admit->complete latency from the runtime event clock."""
+    return latency_summary(rep.records)
 
 
 def main():
@@ -34,7 +40,8 @@ def main():
                        lookahead_rank=48, kernel_mode="ref",
                        cache_enabled=True, chips=4)
     orch = MultiReplicaOrchestrator(index, cfg, args.replicas,
-                                    get_arch("llama3-8b"))
+                                    get_arch("llama3-8b"),
+                                    scheduler=TeleRAGScheduler())
 
     rng = np.random.default_rng(2)
 
@@ -54,6 +61,7 @@ def main():
     print(f"done in {time.time()-t0:.1f}s wall; hit {hits/(hits+miss):.0%}; "
           f"sched overhead {rep.schedule_overhead_s*1e3:.0f} ms; "
           f"assignments {rep.assignments}")
+    print(latency_line(rep))
 
     print("\n== wave 2: warm caches raise routing overlap ==")
     rep2 = orch.run_global_batch(wave(args.requests, 4),
@@ -61,6 +69,7 @@ def main():
                                              seed=4),
                                  micro_batch=args.micro_batch)
     print(f"cache-overlap per assignment: {[a[2] for a in rep2.assignments]}")
+    print(latency_line(rep2))
 
     print("\n== wave 3: replica 1 dies; batches re-queue ==")
     rep3 = orch.run_global_batch(wave(args.requests, 5),
@@ -70,6 +79,7 @@ def main():
                                  dead_replicas={1})
     print(f"re-queued micro-batches: {rep3.requeued}; "
           f"all {len(rep3.all_results())} requests served")
+    print(latency_line(rep3))
 
     print("\n== replica snapshot/restore (fault tolerance) ==")
     snap = orch.replicas[0].snapshot()

@@ -1,0 +1,36 @@
+"""Version compatibility shims for the range of jax releases we support.
+
+Keep every cross-version branch here so call sites stay clean:
+  * ``shard_map`` — top-level ``jax.shard_map`` (jax >= 0.5, ``check_vma``
+    kwarg) vs ``jax.experimental.shard_map`` (older jax, ``check_rep``).
+  * ``compiled_cost_analysis`` — ``Compiled.cost_analysis()`` returns a
+    dict on new jax and a one-element list of dicts on older releases.
+
+``launch/mesh.py`` holds the matching ``AxisType`` fallback (it must stay
+import-light; see that module's docstring).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with fallback to the experimental module."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy_shard_map
+    return legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=check_vma)
+
+
+def compiled_cost_analysis(compiled: Any) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` to a flat dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

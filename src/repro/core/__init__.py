@@ -19,8 +19,11 @@ from repro.core.overlap import (PIPELINE_SIGMA, coverage, overlap_table,
                                 pipeline_pairs)
 from repro.core.prefetch_buffer import PrefetchBuffer, TransferStats
 from repro.core.schedulers import (Assignment, ReplicaHealth,
-                                   assign_to_replicas, group_queries,
+                                   RoundRobinScheduler, SchedulerPolicy,
+                                   TeleRAGScheduler, assign_to_replicas,
+                                   group_queries,
                                    grouping_shared_cluster_gain)
+from repro.core.transfer import TransferEngine, TransferEvent
 
 __all__ = [
     "HardwareProfile", "TPU_V5E", "RTX4090", "H100",
@@ -36,6 +39,8 @@ __all__ = [
     "PrefetchPlan", "RoundState", "plan_batched_prefetch", "plan_prefetch",
     "PIPELINE_SIGMA", "coverage", "overlap_table", "pipeline_pairs",
     "PrefetchBuffer", "TransferStats",
-    "Assignment", "ReplicaHealth", "assign_to_replicas", "group_queries",
+    "Assignment", "ReplicaHealth", "RoundRobinScheduler", "SchedulerPolicy",
+    "TeleRAGScheduler", "assign_to_replicas", "group_queries",
     "grouping_shared_cluster_gain",
+    "TransferEngine", "TransferEvent",
 ]

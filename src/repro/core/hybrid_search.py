@@ -172,7 +172,8 @@ def sharded_device_search(mesh, queries: jax.Array, pages: jax.Array,
         top_s, idx = jax.lax.top_k(s_all, k)
         return top_s, jnp.take_along_axis(i_all, idx, axis=-1)
 
-    fn = jax.shard_map(
+    from repro.compat import shard_map
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(axis), P(axis), P(axis)),
         out_specs=(P(), P()), check_vma=False)

@@ -76,6 +76,7 @@ def plan_batched_prefetch(ranked_per_query: Sequence[Sequence[int]],
     per_budget = np.full(B, budget_bytes / max(B, 1))
     plan = PrefetchPlan([], [], [])
     chosen: Set[int] = set()
+    skipped_seen: Set[int] = set()
     pages_left = free_pages
     covered_count = np.zeros(B, np.int64)
     iters = [list(map(int, r)) for r in ranked_per_query]
@@ -98,12 +99,17 @@ def plan_batched_prefetch(ranked_per_query: Sequence[Sequence[int]],
             if nb <= per_budget[qi] and npg <= pages_left:
                 plan.fetch.append(c)
                 chosen.add(c)
+                if c in skipped_seen:     # another query could afford it
+                    skipped_seen.discard(c)
+                    plan.skipped.remove(c)
                 per_budget[qi] -= nb
                 pages_left -= npg
                 plan.bytes_planned += nb
                 plan.pages_planned += npg
                 covered_count[qi] += 1
-            else:
+            elif c not in skipped_seen:
+                # report each skipped cluster once, not once per query
+                skipped_seen.add(c)
                 plan.skipped.append(c)
     return plan, covered_count
 

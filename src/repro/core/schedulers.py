@@ -114,6 +114,77 @@ def assign_to_replicas(batch_clusters: Sequence[Set[int]],
 
 
 # ---------------------------------------------------------------------------
+# Scheduler policy: one pluggable interface over both schedulers
+# ---------------------------------------------------------------------------
+
+
+class SchedulerPolicy:
+    """Unifies micro-batch formation (prefetching scheduler) and replica
+    routing (cache-aware scheduler) behind one strategy interface, so the
+    orchestrator and the RetrievalRuntime consume a single object instead
+    of two free functions plus flags.
+
+    ``needs_cluster_hints`` tells the caller whether ``assign`` wants the
+    per-batch predicted cluster sets (probing them costs a ranker pass —
+    skip it for routing policies that ignore cache state).
+    """
+
+    name: str = "base"
+    needs_cluster_hints: bool = False
+
+    def group(self, q_in: np.ndarray, micro_batch: int) -> List[List[int]]:
+        raise NotImplementedError
+
+    def assign(self, batch_clusters: Sequence[Set[int]],
+               replica_caches: Sequence[Set[int]], *,
+               max_per_replica: Optional[int] = None) -> List[Assignment]:
+        raise NotImplementedError
+
+
+def _fifo_groups(n: int, micro_batch: int) -> List[List[int]]:
+    return [list(range(i, min(i + micro_batch, n)))
+            for i in range(0, n, micro_batch)]
+
+
+@dataclass
+class TeleRAGScheduler(SchedulerPolicy):
+    """The paper's pair (Fig. 7): similarity grouping + cache-aware
+    routing.  Either half degrades to the naive behaviour via its flag,
+    covering all four ablation cells of §5.4 with one class."""
+
+    similarity_grouping: bool = True
+    cache_aware: bool = True
+    name = "telerag"
+
+    @property
+    def needs_cluster_hints(self) -> bool:          # type: ignore[override]
+        return self.cache_aware
+
+    def group(self, q_in: np.ndarray, micro_batch: int) -> List[List[int]]:
+        if self.similarity_grouping:
+            return group_queries(q_in, micro_batch)
+        return _fifo_groups(q_in.shape[0], micro_batch)
+
+    def assign(self, batch_clusters, replica_caches, *,
+               max_per_replica=None) -> List[Assignment]:
+        if self.cache_aware:
+            return assign_to_replicas(batch_clusters, replica_caches,
+                                      max_per_replica=max_per_replica)
+        n_r = len(replica_caches)
+        return [Assignment(replica=i % n_r, batch_index=i, overlap=0)
+                for i in range(len(batch_clusters))]
+
+
+class RoundRobinScheduler(TeleRAGScheduler):
+    """FIFO micro-batches, round-robin routing (the no-scheduler baseline)."""
+
+    name = "round_robin"
+
+    def __init__(self):
+        super().__init__(similarity_grouping=False, cache_aware=False)
+
+
+# ---------------------------------------------------------------------------
 # Straggler mitigation / elastic hooks (used by the engine + tests)
 # ---------------------------------------------------------------------------
 

@@ -20,8 +20,9 @@ import jax.numpy as jnp
 import repro.core as core
 from repro.configs import get_arch
 from repro.models import transformer as tf
-from repro.serving import (EngineConfig, KVCacheManager, PipelineExecutor,
-                           TeleRAGEngine, make_traces, sample)
+from repro.serving import (EngineConfig, KVCacheManager, RetrievalRuntime,
+                           TeleRAGEngine, latency_summary, make_traces,
+                           sample)
 
 
 def main():
@@ -53,7 +54,7 @@ def main():
         lookahead_rank=min(2 * args.nprobe, args.clusters),
         kernel_mode="ref", cache_enabled=True, chips=4), arch_full)
     eng.calibrate_tcc()
-    ex = PipelineExecutor(eng)
+    runtime = RetrievalRuntime(eng, include_tail=True)
 
     rng = np.random.default_rng(args.seed + 1)
     q = store.embeddings[rng.choice(store.num_vectors, args.requests)]
@@ -62,6 +63,7 @@ def main():
 
     t0 = time.time()
     done = 0
+    all_recs = []
     for lo in range(0, args.requests, args.batch):
         hi = min(lo + args.batch, args.requests)
         qb = q[lo:hi]
@@ -81,13 +83,17 @@ def main():
             tok = sample(logits)
         kv.release(lease)
 
-        # retrieval + telemetry through the pipeline executor
-        res = ex.execute_batch(qb, traces)
-        for r in res:
+        # retrieval + event-clock telemetry through the runtime
+        recs = [runtime.submit(qb[i], traces[i]) for i in range(hi - lo)]
+        runtime.run()
+        all_recs.extend(recs)
+        for rec in recs:
+            r = rec.result
             hit = sum(rt.hits for rt in r.rounds)
             mis = sum(rt.misses for rt in r.rounds)
             print(f"req {r.request_id:3d} [{r.pipeline}] rounds="
                   f"{len(r.rounds)} hit_rate={hit/max(hit+mis,1):.0%} "
+                  f"admit->complete={rec.latency*1e3:7.1f}ms "
                   f"docs={[int(d[0]) for d in r.doc_ids[:1]]}")
         done += hi - lo
     wall = time.time() - t0
@@ -95,6 +101,7 @@ def main():
           f"({done/wall:.2f} req/s real wall on CPU); "
           f"h2d={eng.buffer.stats.bytes_h2d/1e6:.1f}MB "
           f"cache_hit={eng.cache.hit_rate:.0%}")
+    print(f"# event-clock {latency_summary(all_recs)}")
 
 
 if __name__ == "__main__":

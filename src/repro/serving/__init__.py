@@ -4,6 +4,11 @@ from repro.serving.kv_cache import CacheLease, KVCacheManager
 from repro.serving.pipelines import (GlobalBatchReport,
                                      MultiReplicaOrchestrator,
                                      PipelineExecutor, PIPELINE_NAMES)
+from repro.serving.policies import (LatencyContext, RetrievalPolicy,
+                                    get_policy, policy_names,
+                                    register_policy)
+from repro.serving.runtime import (RequestRecord, RequestState,
+                                   RetrievalRuntime, Span, latency_summary)
 from repro.serving.sampler import sample
 from repro.serving.trace import (PIPELINES, RequestTrace, StageTrace,
                                  calibration_windows, make_trace, make_traces)
@@ -13,6 +18,10 @@ __all__ = [
     "CacheLease", "KVCacheManager",
     "GlobalBatchReport", "MultiReplicaOrchestrator", "PipelineExecutor",
     "PIPELINE_NAMES",
+    "LatencyContext", "RetrievalPolicy", "get_policy", "policy_names",
+    "register_policy",
+    "RequestRecord", "RequestState", "RetrievalRuntime", "Span",
+    "latency_summary",
     "sample",
     "PIPELINES", "RequestTrace", "StageTrace", "calibration_windows",
     "make_trace", "make_traces",

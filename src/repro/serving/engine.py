@@ -12,6 +12,9 @@ Three execution modes cover the paper's comparison systems:
   * "telerag"        — lookahead prefetch + hybrid search (ours)
   * "cpu_baseline"   — retrieval entirely on host (Faiss-CPU baseline)
   * "runtime_fetch"  — fetch-on-demand at retrieval time (§3.2, Fig. 5)
+Mode behaviour lives in serving/policies.py (``RetrievalPolicy``); the
+engine owns the resources and delegates, and async H2D copies go through
+``core/transfer.py``'s ``TransferEngine`` as timestamped events.
 
 Quantities that are *measured* on this container: bytes moved, cluster
 hit/miss sets, search results, scheduler quality. Wall-clock is modeled
@@ -32,11 +35,12 @@ from repro.core import budget as budget_mod
 from repro.core.budget import HardwareProfile, TPU_V5E
 from repro.core.cache import CacheConfig, ClusterCache
 from repro.core.datastore import PagedClusters
-from repro.core.embedder import synthetic_rewrite
-from repro.core.hybrid_search import RetrievalResult, host_search, hybrid_retrieve
-from repro.core.ivf import IVFIndex, probe
-from repro.core.lookahead import plan_batched_prefetch
+from repro.core.hybrid_search import RetrievalResult, host_search
+from repro.core.ivf import IVFIndex
 from repro.core.prefetch_buffer import PrefetchBuffer
+from repro.core.transfer import TransferEngine, TransferEvent
+from repro.serving.policies import (LatencyContext, RetrievalPolicy,
+                                    get_policy)
 
 
 @dataclass
@@ -95,17 +99,13 @@ class RequestResult:
 
     def latency(self, mode: str, *, t_cc: float, cluster_bytes: float,
                 link_bw: float, tail_gen_s: float = 0.0) -> float:
-        tot = tail_gen_s
-        for r in self.rounds:
-            if mode == "telerag":
-                tot += r.t_telerag()
-            elif mode == "cpu_baseline":
-                tot += r.t_cpu_baseline(t_cc)
-            elif mode == "runtime_fetch":
-                tot += r.t_runtime_fetch(cluster_bytes, link_bw)
-            else:
-                raise KeyError(mode)
-        return tot
+        """Legacy closed-form composition, now via the policy registry —
+        a new baseline is one policy class, not another elif here."""
+        policy = get_policy(mode)
+        ctx = LatencyContext(t_cc=t_cc, cluster_bytes=cluster_bytes,
+                             link_bw=link_bw)
+        return tail_gen_s + sum(policy.round_latency(r, ctx)
+                                for r in self.rounds)
 
 
 class TeleRAGEngine:
@@ -117,9 +117,16 @@ class TeleRAGEngine:
         self.cfg = cfg
         self.arch = arch
         self.buffer = PrefetchBuffer(index.paged, cfg.buffer_pages)
+        self.transfer = TransferEngine(self.buffer, cfg.hw.host_link_bw)
         self.cache = ClusterCache(cfg.cache)
         self._rng = np.random.default_rng(cfg.seed)
         self._measured_tcc: Optional[float] = None
+
+    @property
+    def policy(self) -> RetrievalPolicy:
+        """Execution strategy for cfg.mode (resolved live so tests can
+        flip the mode on an existing engine)."""
+        return get_policy(self.cfg.mode)
 
     # ---- budget -----------------------------------------------------------
     def prefetch_budget(self, gen_tokens: Sequence[int], batch: int) -> int:
@@ -166,68 +173,27 @@ class TeleRAGEngine:
         return nb / (self.cfg.hw.hbm_bw * self.cfg.chips) + 5e-6
 
     # ---- primitives ---------------------------------------------------------
-    def lookahead(self, q_in: np.ndarray, gen_tokens: Sequence[int],
-                  ) -> Tuple[int, int]:
+    def lookahead_ex(self, q_in: np.ndarray, gen_tokens: Sequence[int], *,
+                     now: float = 0.0,
+                     ) -> Tuple[int, int, Optional[TransferEvent]]:
         """Plan + dispatch prefetch for a micro-batch of q_in embeddings.
 
-        Returns (bytes_planned, clusters_fetched). Async by construction:
-        device_put/scatter dispatch returns before the copy completes, so
-        the subsequent decode steps overlap with it (the real mechanism,
-        not only the model)."""
-        if self.cfg.mode != "telerag":
-            return 0, 0
-        B = q_in.shape[0]
-        bud = self.prefetch_budget(gen_tokens, B)
-        ranked = probe(q_in, self.index, min(self.cfg.lookahead_rank,
-                                             self.index.num_clusters))
-        # cache makes room first so the planner sees true free pages
-        plan, _ = plan_batched_prefetch(
-            list(ranked), self.index.paged, budget_bytes=bud,
-            resident=self.buffer.resident_clusters(),
-            free_pages=self.buffer.free_pages())
-        if plan.pages_planned > self.buffer.free_pages():
-            self.cache.make_room(self.buffer, plan.pages_planned)
-        loaded, rejected = self.buffer.load_clusters(plan.fetch)
-        if rejected:
-            self.cache.make_room(self.buffer,
-                                 sum(int(self.index.paged.cluster_num_pages[c])
-                                     for c in rejected))
-            self.buffer.load_clusters(rejected)
-        self.cache.on_fetched(plan.fetch)
-        return plan.bytes_planned, len(plan.fetch)
+        Returns (bytes_planned, clusters_fetched, transfer event). Async
+        by construction: device_put/scatter dispatch returns before the
+        copy completes, so the subsequent decode steps overlap with it
+        (the real mechanism, not only the model); the event's
+        [start_t, end_t) window is the modeled link occupancy the
+        RetrievalRuntime orders against generation windows."""
+        return self.policy.lookahead(self, q_in, gen_tokens, now=now)
 
-    def retrieve(self, q_out: np.ndarray) -> RetrievalResult:
-        ranked_out = probe(q_out, self.index, self.cfg.nprobe)
-        if self.cfg.mode == "cpu_baseline":
-            # all clusters on host
-            res_s, res_i, miss = [], [], []
-            for b in range(q_out.shape[0]):
-                cs = [int(c) for c in ranked_out[b]]
-                s, i = host_search(self.index.paged, cs, q_out[b],
-                                   self.cfg.top_k)
-                res_s.append(s)
-                res_i.append(i)
-                miss.append(cs)
-            return RetrievalResult(doc_ids=np.stack(res_i),
-                                   scores=np.stack(res_s),
-                                   hit_clusters=[[] for _ in miss],
-                                   missed_clusters=miss,
-                                   nprobe=self.cfg.nprobe)
-        if self.cfg.mode == "runtime_fetch":
-            # fetch exactly the probed clusters now (not overlapped)
-            need = sorted(set(int(c) for r in ranked_out for c in r))
-            pages = sum(int(self.index.paged.cluster_num_pages[c])
-                        for c in need if not self.buffer.is_resident(c))
-            self.cache.make_room(self.buffer, pages)
-            self.buffer.load_clusters(need)
-        res = hybrid_retrieve(self.buffer, q_out, ranked_out,
-                              k=self.cfg.top_k,
-                              kernel_mode=self.cfg.kernel_mode)
-        used = [c for h in res.hit_clusters for c in h]
-        self.cache.record_lookup([c for r in ranked_out for c in r],
-                                 self.buffer.resident_clusters())
-        self.cache.round_update(used)
-        return res
+    def lookahead(self, q_in: np.ndarray, gen_tokens: Sequence[int],
+                  ) -> Tuple[int, int]:
+        nbytes, nfetch, _ = self.lookahead_ex(q_in, gen_tokens)
+        return nbytes, nfetch
+
+    def retrieve(self, q_out: np.ndarray, *, now: float = 0.0,
+                 ) -> RetrievalResult:
+        return self.policy.retrieve(self, q_out, now=now)
 
     def end_batch(self) -> None:
         """Post-batch consolidation (paper App. D reproducibility rule)."""
@@ -250,6 +216,7 @@ class TeleRAGEngine:
     def restore(self, snap: dict) -> None:
         """Rebuild device state from a snapshot (replica restart)."""
         self.buffer = PrefetchBuffer(self.index.paged, self.cfg.buffer_pages)
+        self.transfer = TransferEngine(self.buffer, self.cfg.hw.host_link_bw)
         self.cache = ClusterCache(self.cfg.cache)
         self.buffer.load_clusters(snap["resident"])
         self.cache.hotness.update({int(k): v for k, v in

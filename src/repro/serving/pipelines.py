@@ -1,15 +1,16 @@
 """The six RAG pipelines (paper §5.1, Fig. 8) as trace-driven executors,
 plus the multi-replica orchestration with both schedulers (§4.2).
 
-``PipelineExecutor`` walks each request's stage plan against one engine
-replica: generation windows advance the modeled clock AND trigger
-lookahead prefetch; retrieval stages run the real hybrid search; multi-
-round pipelines reuse earlier prefetches incrementally (§4.3).
+``PipelineExecutor`` is the legacy lockstep facade: it admits a whole
+micro-batch at t=0 into an event-driven ``RetrievalRuntime`` and drains
+it, which reproduces the old ``execute_batch`` results (same engine ops,
+same RNG stream) while the actual execution is the continuous-batching
+state machine in ``serving/runtime.py``.
 
-``MultiReplicaOrchestrator`` implements Fig. 7: the prefetching scheduler
-groups the global batch into micro-batches by embedding similarity, the
-cache-aware scheduler routes micro-batches to replicas by cached-cluster
-overlap, with deadline-based straggler re-queue.
+``MultiReplicaOrchestrator`` implements Fig. 7 through a pluggable
+``SchedulerPolicy``: micro-batch formation (similarity grouping) and
+replica routing (cached-cluster overlap) are one strategy object, with
+deadline-based straggler re-queue on top.
 """
 
 from __future__ import annotations
@@ -20,12 +21,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.embedder import synthetic_rewrite
 from repro.core.ivf import IVFIndex, probe
-from repro.core.schedulers import (ReplicaHealth, assign_to_replicas,
-                                   group_queries)
-from repro.serving.engine import (EngineConfig, RequestResult, RoundTelemetry,
-                                  TeleRAGEngine)
+from repro.core.schedulers import (ReplicaHealth, SchedulerPolicy,
+                                   TeleRAGScheduler)
+from repro.serving.engine import EngineConfig, RequestResult, TeleRAGEngine
+from repro.serving.runtime import (RequestRecord, RetrievalRuntime,
+                                   round_plan, tail_gen_tokens)
 from repro.serving.trace import RequestTrace
 
 PIPELINE_NAMES = ("hyde", "subq", "iter", "irg", "flare", "self_rag")
@@ -36,102 +37,28 @@ class PipelineExecutor:
 
     def __init__(self, engine: TeleRAGEngine):
         self.engine = engine
-        self._rng = np.random.default_rng(engine.cfg.seed + 1)
+        self.runtime = RetrievalRuntime(engine)
+        self.last_records: List[RequestRecord] = []
 
     def execute_batch(self, q_in: np.ndarray, traces: Sequence[RequestTrace],
                       ) -> List[RequestResult]:
         """q_in: [B, d] initial query embeddings; one trace per query."""
-        B = q_in.shape[0]
-        assert B == len(traces)
-        results = [RequestResult(t.request_id, t.pipeline) for t in traces]
-        cur_q = q_in.copy()
-        max_rounds = max(t.rounds for t in traces)
-        # stage cursor per request: list of (gen_tokens_before, num_queries)
-        plans = [self._round_plan(t) for t in traces]
-
-        for rnd in range(max_rounds):
-            active = [b for b in range(B) if rnd < len(plans[b])]
-            if not active:
-                break
-            gen_tokens = [plans[b][rnd][0] for b in active]
-            act_q = cur_q[active]
-
-            # 1) lookahead prefetch keyed on the *current* query (q_in of
-            #    this round), dispatched before the generation window
-            nbytes, nfetch = self.engine.lookahead(act_q, gen_tokens)
-
-            # 2) pre-retrieval generation window (modeled clock; the real
-            #    decode overlap is exercised by examples/serve_rag.py)
-            t_llm = [self.engine.llm_window_seconds(g, len(active))
-                     for g in gen_tokens]
-
-            # 3) rewrite -> q_out (SubQ expands to num_queries rewrites)
-            q_out_rows: List[np.ndarray] = []
-            owners: List[int] = []
-            for j, b in enumerate(active):
-                sigma = traces[b].rewrite_sigma
-                nq = plans[b][rnd][1]
-                for _ in range(nq):
-                    q_out_rows.append(
-                        synthetic_rewrite(act_q[j][None, :], sigma,
-                                          self._rng)[0]
-                        if sigma > 0 else act_q[j])
-                    owners.append(b)
-            q_out = np.stack(q_out_rows)
-
-            # 4) hybrid retrieval (device hits + host misses + merge)
-            res = self.engine.retrieve(q_out)
-
-            # 5) telemetry per request
-            t_transfer = nbytes / self.engine.cfg.hw.host_link_bw
-            for j, b in enumerate(active):
-                rows = [i for i, o in enumerate(owners) if o == b]
-                hits = sum(len(res.hit_clusters[i]) for i in rows)
-                misses = sum(len(res.missed_clusters[i]) for i in rows)
-                pages_hit = hits * float(np.mean(
-                    self.engine.index.paged.cluster_num_pages))
-                rt = RoundTelemetry(
-                    round_index=rnd, batch=len(active),
-                    gen_tokens=gen_tokens[j],
-                    t_llm_window=t_llm[j],
-                    bytes_prefetched=nbytes // max(len(active), 1),
-                    t_prefetch=t_transfer,
-                    hits=hits, misses=misses,
-                    t_host_search=misses * self.engine.effective_tcc(),
-                    t_dev_search=self.engine._dev_search_seconds(
-                        int(pages_hit)),
-                    t_merge=2e-5)
-                results[b].rounds.append(rt)
-                results[b].doc_ids.extend(res.doc_ids[i] for i in rows)
-
-            # 6) next round's query drifts from this round's rewrite
-            for j, b in enumerate(active):
-                rows = [i for i, o in enumerate(owners) if o == b]
-                cur_q[b] = q_out[rows[0]]
-
-        self.engine.end_batch()
-        return results
+        assert q_in.shape[0] == len(traces)
+        recs = [self.runtime.submit(q_in[i], traces[i])
+                for i in range(len(traces))]
+        self.runtime.run()
+        self.last_records = recs
+        return [r.result for r in recs]
 
     @staticmethod
     def _round_plan(trace: RequestTrace) -> List[Tuple[int, int]]:
         """[(gen_tokens_before_retrieval, num_queries), ...] per round."""
-        plan: List[Tuple[int, int]] = []
-        acc = 0
-        for s in trace.stages:
-            if s.kind == "retrieve":
-                plan.append((acc, s.num_queries))
-                acc = 0
-            else:
-                acc += s.gen_tokens
-        return plan
+        return round_plan(trace)
 
     @staticmethod
     def tail_gen_tokens(trace: RequestTrace) -> int:
         """Generation after the last retrieval (counts once per request)."""
-        acc = 0
-        for s in trace.stages:
-            acc = 0 if s.kind == "retrieve" else acc + s.gen_tokens
-        return acc
+        return tail_gen_tokens(trace)
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +72,7 @@ class GlobalBatchReport:
     schedule_overhead_s: float
     assignments: List[Tuple[int, int, int]]      # (batch_idx, replica, overlap)
     requeued: List[int] = field(default_factory=list)
+    records: List[RequestRecord] = field(default_factory=list)
 
     def all_results(self) -> List[RequestResult]:
         out: List[RequestResult] = []
@@ -155,14 +83,16 @@ class GlobalBatchReport:
 
 class MultiReplicaOrchestrator:
     def __init__(self, index: IVFIndex, cfg: EngineConfig, num_replicas: int,
-                 arch=None, *, use_prefetch_sched: bool = True,
+                 arch=None, *, scheduler: Optional[SchedulerPolicy] = None,
+                 use_prefetch_sched: bool = True,
                  use_cache_sched: bool = True):
         self.index = index
         self.replicas = [TeleRAGEngine(index, cfg, arch)
                          for _ in range(num_replicas)]
         self.execs = [PipelineExecutor(e) for e in self.replicas]
-        self.use_prefetch_sched = use_prefetch_sched
-        self.use_cache_sched = use_cache_sched
+        self.scheduler = scheduler or TeleRAGScheduler(
+            similarity_grouping=use_prefetch_sched,
+            cache_aware=use_cache_sched)
         self.health = ReplicaHealth()
         self.nprobe_for_sched = min(64, index.num_clusters)
 
@@ -172,25 +102,17 @@ class MultiReplicaOrchestrator:
                          dead_replicas: Optional[set] = None,
                          ) -> GlobalBatchReport:
         t0 = time.perf_counter()
-        B = q_in.shape[0]
-        if self.use_prefetch_sched:
-            groups = group_queries(q_in, micro_batch)
-        else:
-            groups = [list(range(i, min(i + micro_batch, B)))
-                      for i in range(0, B, micro_batch)]
+        groups = self.scheduler.group(q_in, micro_batch)
 
-        if self.use_cache_sched:
+        if self.scheduler.needs_cluster_hints:
             batch_clusters = []
             for g in groups:
                 ranked = probe(q_in[g], self.index, self.nprobe_for_sched)
                 batch_clusters.append(set(int(c) for r in ranked for c in r))
-            caches = [e.buffer.resident_clusters() for e in self.replicas]
-            assigns = assign_to_replicas(batch_clusters, caches)
         else:
-            from repro.core.schedulers import Assignment
-            assigns = [Assignment(replica=i % len(self.replicas),
-                                  batch_index=i, overlap=0)
-                       for i in range(len(groups))]
+            batch_clusters = [set() for _ in groups]
+        caches = [e.buffer.resident_clusters() for e in self.replicas]
+        assigns = self.scheduler.assign(batch_clusters, caches)
         sched_s = time.perf_counter() - t0
 
         # straggler handling: re-queue micro-batches from dead replicas
@@ -208,13 +130,16 @@ class MultiReplicaOrchestrator:
             fixed.append(a)
 
         per_replica: Dict[int, List[RequestResult]] = {i: [] for i in alive}
+        records: List[RequestRecord] = []
         for a in fixed:
             g = groups[a.batch_index]
             res = self.execs[a.replica].execute_batch(
                 q_in[g], [traces[i] for i in g])
             per_replica[a.replica].extend(res)
+            records.extend(self.execs[a.replica].last_records)
         return GlobalBatchReport(
             per_replica_results=per_replica,
             schedule_overhead_s=sched_s,
             assignments=[(a.batch_index, a.replica, a.overlap) for a in fixed],
-            requeued=requeued)
+            requeued=requeued,
+            records=records)

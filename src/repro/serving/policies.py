@@ -1,0 +1,211 @@
+"""Retrieval execution policies — the paper's comparison systems as a
+strategy layer (§3.2, §4.1, Fig. 5).
+
+Each policy bundles the two planes that the legacy ``TeleRAGEngine``
+scattered across ``if mode == ...`` branches:
+
+  * **data plane** — how a round's retrieval actually executes against
+    the engine's buffer/cache/index (``lookahead`` / ``retrieve``);
+  * **timing plane** — how the round's measured telemetry composes into
+    modeled wall-clock (``transfer_ready_offset`` / ``search_seconds``),
+    which the event-driven ``RetrievalRuntime`` consumes as dependency
+    edges and the legacy ``RequestResult.latency`` sums per round.
+
+Adding a baseline is one ``@register_policy`` class, not edits to the
+engine, the telemetry math, and the executor.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Dict, Optional, Sequence, Tuple, Type
+
+import numpy as np
+
+from repro.core.hybrid_search import RetrievalResult, host_search, hybrid_retrieve
+from repro.core.ivf import probe
+from repro.core.lookahead import plan_batched_prefetch
+from repro.core.transfer import TransferEvent
+
+if TYPE_CHECKING:                                    # avoid circular import
+    from repro.serving.engine import RoundTelemetry, TeleRAGEngine
+
+
+@dataclass(frozen=True)
+class LatencyContext:
+    """Hardware constants the timing plane composes telemetry with."""
+
+    t_cc: float                  # host per-cluster search seconds
+    cluster_bytes: float         # mean cluster payload (demand-fetch model)
+    link_bw: float               # H2D link bandwidth for demand fetches
+
+    @classmethod
+    def from_engine(cls, engine: "TeleRAGEngine") -> "LatencyContext":
+        return cls(
+            t_cc=engine.effective_tcc(),
+            cluster_bytes=float(
+                np.mean(engine.index.paged.all_cluster_bytes())),
+            link_bw=float(engine.cfg.hw.host_link_bw))
+
+
+class RetrievalPolicy:
+    """Base strategy; concrete policies override both planes."""
+
+    name: str = ""
+    prefetches: bool = False     # does lookahead dispatch an async copy?
+
+    # ---- data plane -------------------------------------------------------
+    def lookahead(self, engine: "TeleRAGEngine", q_in: np.ndarray,
+                  gen_tokens: Sequence[int], *, now: float = 0.0,
+                  ) -> Tuple[int, int, Optional[TransferEvent]]:
+        """Plan + dispatch prefetch. Returns (bytes_planned, clusters,
+        transfer event). Non-prefetching policies are a no-op."""
+        return 0, 0, None
+
+    def retrieve(self, engine: "TeleRAGEngine", q_out: np.ndarray, *,
+                 now: float = 0.0) -> RetrievalResult:
+        raise NotImplementedError
+
+    # ---- timing plane -----------------------------------------------------
+    def transfer_ready_offset(self, rt: "RoundTelemetry",
+                              ctx: LatencyContext) -> Optional[float]:
+        """Seconds after round start at which prefetched data is usable;
+        None when retrieval has no transfer dependency."""
+        return None
+
+    def search_seconds(self, rt: "RoundTelemetry",
+                       ctx: LatencyContext) -> float:
+        """Retrieval critical path once its dependencies are met."""
+        raise NotImplementedError
+
+    def round_latency(self, rt: "RoundTelemetry",
+                      ctx: LatencyContext) -> float:
+        """Round wall-clock from the dependency decomposition.  Identical
+        to the legacy closed forms (``RoundTelemetry.t_*``) by
+        construction — asserted in tests/test_runtime.py."""
+        off = self.transfer_ready_offset(rt, ctx)
+        start = rt.t_llm_window if off is None else max(rt.t_llm_window, off)
+        return start + self.search_seconds(rt, ctx)
+
+    # ---- shared data-plane helpers ---------------------------------------
+    @staticmethod
+    def _hybrid_retrieve(engine: "TeleRAGEngine", q_out: np.ndarray,
+                         ranked_out: np.ndarray) -> RetrievalResult:
+        res = hybrid_retrieve(engine.buffer, q_out, ranked_out,
+                              k=engine.cfg.top_k,
+                              kernel_mode=engine.cfg.kernel_mode)
+        used = [c for h in res.hit_clusters for c in h]
+        engine.cache.record_lookup([c for r in ranked_out for c in r],
+                                   engine.buffer.resident_clusters())
+        engine.cache.round_update(used)
+        return res
+
+
+_POLICIES: Dict[str, RetrievalPolicy] = {}
+
+
+def register_policy(cls: Type[RetrievalPolicy]) -> Type[RetrievalPolicy]:
+    _POLICIES[cls.name] = cls()
+    return cls
+
+
+def get_policy(mode: str) -> RetrievalPolicy:
+    if mode not in _POLICIES:
+        raise KeyError(mode)
+    return _POLICIES[mode]
+
+
+def policy_names() -> Tuple[str, ...]:
+    return tuple(_POLICIES)
+
+
+@register_policy
+class TeleRAGPolicy(RetrievalPolicy):
+    """Lookahead prefetch overlapped with generation + hybrid search."""
+
+    name = "telerag"
+    prefetches = True
+
+    def lookahead(self, engine, q_in, gen_tokens, *, now=0.0):
+        B = q_in.shape[0]
+        bud = engine.prefetch_budget(gen_tokens, B)
+        ranked = probe(q_in, engine.index, min(engine.cfg.lookahead_rank,
+                                               engine.index.num_clusters))
+        # cache makes room first so the planner sees true free pages
+        plan, _ = plan_batched_prefetch(
+            list(ranked), engine.index.paged, budget_bytes=bud,
+            resident=engine.buffer.resident_clusters(),
+            free_pages=engine.buffer.free_pages())
+        if plan.pages_planned > engine.buffer.free_pages():
+            engine.cache.make_room(engine.buffer, plan.pages_planned)
+        if plan.fetch:
+            ev = engine.transfer.submit(
+                plan.fetch, now=now, nbytes=plan.bytes_planned,
+                make_room=lambda pages: engine.cache.make_room(engine.buffer,
+                                                               pages))
+        else:
+            # nothing to move: no link event (a 0-byte event could still
+            # inherit a channel-queue wait), but fold any queued device
+            # invalidations exactly as the legacy load path did
+            engine.buffer.load_clusters([])
+            ev = None
+        engine.cache.on_fetched(plan.fetch)
+        return plan.bytes_planned, len(plan.fetch), ev
+
+    def retrieve(self, engine, q_out, *, now=0.0):
+        ranked_out = probe(q_out, engine.index, engine.cfg.nprobe)
+        return self._hybrid_retrieve(engine, q_out, ranked_out)
+
+    def transfer_ready_offset(self, rt, ctx):
+        return rt.t_prefetch
+
+    def search_seconds(self, rt, ctx):
+        return max(rt.t_host_search, rt.t_dev_search) + rt.t_merge
+
+
+@register_policy
+class CpuBaselinePolicy(RetrievalPolicy):
+    """Retrieval entirely on host (Faiss-CPU baseline)."""
+
+    name = "cpu_baseline"
+
+    def retrieve(self, engine, q_out, *, now=0.0):
+        ranked_out = probe(q_out, engine.index, engine.cfg.nprobe)
+        res_s, res_i, miss = [], [], []
+        for b in range(q_out.shape[0]):
+            cs = [int(c) for c in ranked_out[b]]
+            s, i = host_search(engine.index.paged, cs, q_out[b],
+                               engine.cfg.top_k)
+            res_s.append(s)
+            res_i.append(i)
+            miss.append(cs)
+        return RetrievalResult(doc_ids=np.stack(res_i),
+                               scores=np.stack(res_s),
+                               hit_clusters=[[] for _ in miss],
+                               missed_clusters=miss,
+                               nprobe=engine.cfg.nprobe)
+
+    def search_seconds(self, rt, ctx):
+        return (rt.hits + rt.misses) * ctx.t_cc
+
+
+@register_policy
+class RuntimeFetchPolicy(RetrievalPolicy):
+    """Fetch-on-demand at retrieval time — no overlap (§3.2, Fig. 5)."""
+
+    name = "runtime_fetch"
+
+    def retrieve(self, engine, q_out, *, now=0.0):
+        ranked_out = probe(q_out, engine.index, engine.cfg.nprobe)
+        # fetch exactly the probed clusters now (not overlapped)
+        need = sorted(set(int(c) for r in ranked_out for c in r))
+        pages = sum(int(engine.index.paged.cluster_num_pages[c])
+                    for c in need if not engine.buffer.is_resident(c))
+        engine.cache.make_room(engine.buffer, pages)
+        engine.transfer.submit(need, now=now, kind="demand",
+                               nbytes=pages * engine.buffer.page_nbytes)
+        return self._hybrid_retrieve(engine, q_out, ranked_out)
+
+    def search_seconds(self, rt, ctx):
+        nb = (rt.hits + rt.misses) * ctx.cluster_bytes
+        return nb / ctx.link_bw + rt.t_dev_search + rt.t_merge

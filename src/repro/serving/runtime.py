@@ -1,0 +1,344 @@
+"""Event-driven retrieval runtime: continuous batching over a priority
+event queue (§4.1/§4.2 made operational).
+
+Replaces the lockstep ``execute_batch`` loop.  Requests are **admitted**
+at arrival time, grouped into micro-batches by a ``SchedulerPolicy``, and
+walked through a per-request state machine
+
+    QUEUED -> ADMITTED -> PREFETCHING -> GENERATING -> RETRIEVING
+           -> (next round | COMPLETE)
+
+driven by a min-heap of timestamped events on a modeled wall clock.
+Prefetch copies are ``TransferEvent``s on the engine's double-buffered
+link, so overlap between a transfer and a generation window is a fact of
+the event timeline (two intersecting intervals), not a ``max()``.
+
+Execution semantics:
+
+  * Engine *data* operations (lookahead planning, device/host search,
+    cache updates) run at **group granularity** when the group's round
+    frontier fires — byte-for-byte the same operations, order, and RNG
+    stream as the legacy executor, so retrieval results and telemetry
+    are identical.
+  * The *clock* is tracked **per request**: each request's round r
+    starts when its own round r-1 finished; its retrieval waits on the
+    later of its generation window and its view of the shared transfer
+    (``TransferEngine.ready_t``).  For a static batch this reproduces
+    the legacy ``RoundTelemetry`` composition to 1e-6
+    (tests/test_runtime.py), while staggered arrivals yield transfers
+    genuinely in flight during other requests' generation windows.
+
+A request's admit→complete latency is read off the event clock
+(``RequestRecord.latency``), which is what the serve drivers report.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.embedder import synthetic_rewrite
+from repro.core.schedulers import SchedulerPolicy
+from repro.serving.engine import (RequestResult, RoundTelemetry,
+                                  TeleRAGEngine)
+from repro.serving.policies import LatencyContext
+from repro.serving.trace import RequestTrace
+
+
+class RequestState(str, Enum):
+    QUEUED = "queued"
+    ADMITTED = "admitted"
+    PREFETCHING = "prefetching"
+    GENERATING = "generating"
+    RETRIEVING = "retrieving"
+    COMPLETE = "complete"
+
+
+@dataclass(frozen=True)
+class Span:
+    """One interval on a request's timeline ([t, t] for instant events)."""
+
+    kind: str
+    start: float
+    end: float
+    round_index: int = -1
+
+    def overlaps(self, lo: float, hi: float) -> bool:
+        return self.start < hi and lo < self.end
+
+
+@dataclass(eq=False)                   # identity semantics: records are
+class RequestRecord:                   # live state, and `q` is an ndarray
+    request_id: int
+    pipeline: str
+    trace: RequestTrace
+    q: np.ndarray
+    arrival_t: float
+    result: RequestResult
+    admit_t: float = float("nan")
+    complete_t: float = float("nan")
+    state: RequestState = RequestState.QUEUED
+    timeline: List[Span] = field(default_factory=list)
+    round_start: List[float] = field(default_factory=list)
+
+    @property
+    def latency(self) -> float:
+        """Admit→complete on the event clock."""
+        return self.complete_t - self.admit_t
+
+    def spans(self, kind: str) -> List[Span]:
+        return [s for s in self.timeline if s.kind == kind]
+
+
+def latency_summary(records: Sequence["RequestRecord"]) -> str:
+    """One-line nearest-rank p50/p95/mean of admit→complete latencies."""
+    if not records:
+        return "admit->complete: no completed requests"
+    lats = np.sort([r.latency for r in records])
+    nearest = lambda q: lats[max(0, -(-len(lats) * q // 100) - 1)]
+    return (f"admit->complete p50={nearest(50)*1e3:.1f}ms "
+            f"p95={nearest(95)*1e3:.1f}ms mean={lats.mean()*1e3:.1f}ms "
+            f"max={lats[-1]*1e3:.1f}ms")
+
+
+def round_plan(trace: RequestTrace) -> List[Tuple[int, int]]:
+    """[(gen_tokens_before_retrieval, num_queries), ...] per round."""
+    plan: List[Tuple[int, int]] = []
+    acc = 0
+    for s in trace.stages:
+        if s.kind == "retrieve":
+            plan.append((acc, s.num_queries))
+            acc = 0
+        else:
+            acc += s.gen_tokens
+    return plan
+
+
+def tail_gen_tokens(trace: RequestTrace) -> int:
+    """Generation after the last retrieval (counts once per request)."""
+    acc = 0
+    for s in trace.stages:
+        acc = 0 if s.kind == "retrieve" else acc + s.gen_tokens
+    return acc
+
+
+@dataclass
+class _Group:
+    gid: int
+    members: List[RequestRecord]
+    plans: List[List[Tuple[int, int]]]
+    cur_q: np.ndarray                        # [B, d], drifts per round
+    scheduled_rounds: set = field(default_factory=set)
+
+
+class RetrievalRuntime:
+    """Continuous-batching executor for one engine replica."""
+
+    def __init__(self, engine: TeleRAGEngine, *,
+                 scheduler: Optional[SchedulerPolicy] = None,
+                 micro_batch: Optional[int] = None,
+                 ctx: Optional[LatencyContext] = None,
+                 include_tail: bool = False):
+        self.engine = engine
+        self.scheduler = scheduler
+        self.micro_batch = micro_batch
+        self._ctx = ctx
+        self.include_tail = include_tail
+        self._rng = np.random.default_rng(engine.cfg.seed + 1)
+        self._now = 0.0                      # drained clock across run()s
+        self._seq = itertools.count()
+        self._gid = itertools.count()
+        self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._pending: List[RequestRecord] = []
+        self._batch: List[RequestRecord] = []
+        self.event_log: List[Tuple[float, str, int]] = []
+
+    @property
+    def ctx(self) -> LatencyContext:
+        if self._ctx is None:
+            self._ctx = LatencyContext.from_engine(self.engine)
+        return self._ctx
+
+    # ---- submission --------------------------------------------------------
+    def submit(self, q: np.ndarray, trace: RequestTrace,
+               arrival_t: float = 0.0) -> RequestRecord:
+        """Queue one request. ``arrival_t`` is relative to this run's
+        start (the clock is monotonic across run() calls)."""
+        rec = RequestRecord(
+            request_id=trace.request_id, pipeline=trace.pipeline,
+            trace=trace, q=np.asarray(q), arrival_t=float(arrival_t),
+            result=RequestResult(trace.request_id, trace.pipeline))
+        self._pending.append(rec)
+        self._batch.append(rec)
+        return rec
+
+    # ---- event loop --------------------------------------------------------
+    def _push(self, t: float, kind: str, payload: tuple) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def run(self) -> List[RequestRecord]:
+        """Drain all submitted requests; return their records (submission
+        order).  Consolidates the engine (end_batch) once drained."""
+        base = self._now
+        for rec in self._pending:
+            rec.arrival_t += base
+        for t in sorted({r.arrival_t for r in self._pending}):
+            self._push(t, "admit", ())
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            self._now = max(self._now, t)
+            if kind == "admit":
+                self._on_admit(t)
+            elif kind == "round":
+                self._on_round(*payload, now=t)
+            elif kind == "mark":
+                rec, state, label = payload
+                if state is not None:
+                    rec.state = state
+                self.event_log.append((t, label, rec.request_id))
+        self.engine.end_batch()
+        out, self._batch = self._batch, []
+        return out
+
+    # ---- handlers ----------------------------------------------------------
+    def _on_admit(self, now: float) -> None:
+        ready = [r for r in self._pending if r.arrival_t <= now + 1e-12]
+        if not ready:
+            return
+        self._pending = [r for r in self._pending if r not in ready]
+        q = np.stack([r.q for r in ready])
+        if self.scheduler is None:
+            groups_idx = [list(range(len(ready)))]
+        else:
+            groups_idx = self.scheduler.group(
+                q, self.micro_batch or len(ready))
+        for gi in groups_idx:
+            members = [ready[i] for i in gi]
+            plans = [round_plan(m.trace) for m in members]
+            g = _Group(gid=next(self._gid), members=members, plans=plans,
+                       cur_q=np.stack([m.q for m in members]).copy())
+            for m, p in zip(members, plans):
+                m.admit_t = now
+                m.state = RequestState.ADMITTED
+                m.round_start = [now] + [float("nan")] * (len(p) - 1)
+                m.timeline.append(Span("admit", now, now))
+                self.event_log.append((now, "admit", m.request_id))
+                if not p:                    # trace with no retrieval round
+                    m.complete_t = now
+                    m.state = RequestState.COMPLETE
+                    m.timeline.append(Span("complete", now, now))
+            g.scheduled_rounds.add(0)
+            self._push(now, "round", (g, 0))
+
+    def _on_round(self, g: _Group, rnd: int, *, now: float) -> None:
+        """Group round frontier: run the engine data ops for every member
+        still active in round ``rnd``, then schedule each member's
+        per-request events from its own round-start."""
+        eng = self.engine
+        policy = eng.policy
+        active = [i for i in range(len(g.members))
+                  if rnd < len(g.plans[i])]
+        if not active:
+            return
+        batch = len(active)
+        gen_tokens = [g.plans[i][rnd][0] for i in active]
+        act_q = g.cur_q[active]
+
+        # 1) lookahead prefetch keyed on the *current* query, dispatched
+        #    (async) at the frontier — in flight during generation
+        nbytes, nfetch, ev = eng.lookahead_ex(act_q, gen_tokens, now=now)
+
+        # 2) rewrite -> q_out (SubQ expands to num_queries rewrites)
+        q_out_rows: List[np.ndarray] = []
+        owners: List[int] = []
+        for j, i in enumerate(active):
+            sigma = g.members[i].trace.rewrite_sigma
+            nq = g.plans[i][rnd][1]
+            for _ in range(nq):
+                q_out_rows.append(
+                    synthetic_rewrite(act_q[j][None, :], sigma,
+                                      self._rng)[0]
+                    if sigma > 0 else act_q[j])
+                owners.append(i)
+        q_out = np.stack(q_out_rows)
+
+        # 3) hybrid retrieval (device hits + host misses + merge)
+        res = eng.retrieve(q_out, now=now)
+
+        # 4) per-request telemetry + event-clock scheduling
+        t_transfer = nbytes / eng.cfg.hw.host_link_bw
+        mean_pages = float(np.mean(eng.index.paged.cluster_num_pages))
+        continuing: List[float] = []
+        for j, i in enumerate(active):
+            req = g.members[i]
+            rows = [r for r, o in enumerate(owners) if o == i]
+            hits = sum(len(res.hit_clusters[r]) for r in rows)
+            misses = sum(len(res.missed_clusters[r]) for r in rows)
+            rt = RoundTelemetry(
+                round_index=rnd, batch=batch, gen_tokens=gen_tokens[j],
+                t_llm_window=eng.llm_window_seconds(gen_tokens[j], batch),
+                bytes_prefetched=nbytes // max(batch, 1),
+                t_prefetch=t_transfer,
+                hits=hits, misses=misses,
+                t_host_search=misses * eng.effective_tcc(),
+                t_dev_search=eng._dev_search_seconds(
+                    int(hits * mean_pages)),
+                t_merge=2e-5)
+            req.result.rounds.append(rt)
+            req.result.doc_ids.extend(res.doc_ids[r] for r in rows)
+
+            rs = req.round_start[rnd]
+            gen_end = rs + rt.t_llm_window
+            ready = None
+            if policy.prefetches and ev is not None:
+                ready = eng.transfer.ready_t(ev, rs)
+            retrieve_start = (gen_end if ready is None
+                              else max(gen_end, ready))
+            round_end = retrieve_start + policy.search_seconds(rt, self.ctx)
+
+            if policy.prefetches:
+                req.timeline.append(Span("prefetch_dispatch", rs, rs, rnd))
+                self._push(rs, "mark",
+                           (req, RequestState.PREFETCHING, "prefetch"))
+            req.timeline.append(Span("generate", rs, gen_end, rnd))
+            self._push(rs, "mark", (req, RequestState.GENERATING, "generate"))
+            if retrieve_start > gen_end:
+                req.timeline.append(
+                    Span("transfer_wait", gen_end, retrieve_start, rnd))
+            req.timeline.append(
+                Span("retrieve", retrieve_start, round_end, rnd))
+            self._push(retrieve_start, "mark",
+                       (req, RequestState.RETRIEVING, "retrieve"))
+
+            if rnd + 1 < len(g.plans[i]):
+                req.round_start[rnd + 1] = round_end
+                continuing.append(round_end)
+            else:
+                complete_t = round_end
+                if self.include_tail:
+                    tail_s = eng.llm_window_seconds(
+                        tail_gen_tokens(req.trace), batch)
+                    if tail_s > 0:
+                        req.timeline.append(
+                            Span("generate_tail", round_end,
+                                 round_end + tail_s, rnd))
+                    complete_t = round_end + tail_s
+                req.complete_t = complete_t
+                req.timeline.append(Span("complete", complete_t, complete_t))
+                self._push(complete_t, "mark",
+                           (req, RequestState.COMPLETE, "complete"))
+
+        # 5) next round's query drifts from this round's rewrite
+        for j, i in enumerate(active):
+            rows = [r for r, o in enumerate(owners) if o == i]
+            g.cur_q[i] = q_out[rows[0]]
+
+        # 6) the earliest finisher opens the next round frontier
+        if continuing and (rnd + 1) not in g.scheduled_rounds:
+            g.scheduled_rounds.add(rnd + 1)
+            self._push(min(continuing), "round", (g, rnd + 1))

@@ -71,6 +71,63 @@ def test_batched_plan_shares_clusters(small_index):
     assert covered.sum() >= 3                 # all three covered cluster 1
 
 
+def test_batched_plan_empty_batch(small_index):
+    plan, covered = core.plan_batched_prefetch([], small_index.paged,
+                                               budget_bytes=10_000,
+                                               resident=set(),
+                                               free_pages=100)
+    assert plan.fetch == [] and plan.skipped == [] and plan.resident_hits == []
+    assert plan.bytes_planned == 0 and plan.pages_planned == 0
+    assert covered.shape == (0,)
+
+
+def test_batched_plan_shared_cluster_charged_once(small_index):
+    """A cluster every query wants is paid for by exactly one query's
+    budget split; the others get it free (§4.2)."""
+    paged = small_index.paged
+    nb = paged.cluster_bytes(1)
+    # total budget = 3 * bytes(1) => per-query split is exactly bytes(1)
+    plan, covered = core.plan_batched_prefetch(
+        [[1], [1], [1]], paged, budget_bytes=3 * nb,
+        resident=set(), free_pages=10_000)
+    assert plan.fetch == [1]
+    assert plan.bytes_planned == nb              # charged once, not thrice
+    assert covered.tolist() == [1, 1, 1]         # but all three covered
+    assert plan.skipped == []
+
+
+def test_batched_plan_skipped_is_unique(small_index):
+    """Every query skipping the same over-budget cluster reports it once."""
+    plan, covered = core.plan_batched_prefetch(
+        [[5], [5], [5]], small_index.paged, budget_bytes=1,
+        resident=set(), free_pages=10_000)
+    assert plan.fetch == []
+    assert plan.skipped == [5]
+    assert covered.tolist() == [0, 0, 0]
+
+
+def test_round_state_never_refetches_across_rounds(small_index):
+    """§4.3 incremental prefetch: clusters fetched in an earlier round
+    are treated as resident forever after."""
+    paged = small_index.paged
+    rs = core.RoundState()
+    budget = int(paged.cluster_bytes(0) * 4)
+    ranked = list(range(8))
+    p1 = rs.incremental_plan(ranked, paged, budget_bytes=budget,
+                             resident=set(), free_pages=10_000)
+    assert p1.fetch                               # round one fetches
+    p2 = rs.incremental_plan(ranked, paged, budget_bytes=budget,
+                             resident=set(), free_pages=10_000)
+    assert not set(p2.fetch) & set(p1.fetch)      # no re-fetch
+    assert set(p1.fetch) <= set(p2.resident_hits)
+    # a drifted ranking still tops up only the missing clusters
+    fetched_before = set(rs.fetched)
+    p3 = rs.incremental_plan(list(range(4, 12)), paged, budget_bytes=budget,
+                             resident=set(), free_pages=10_000)
+    assert not set(p3.fetch) & fetched_before
+    assert rs.round == 3
+
+
 def test_buffer_load_evict_consistency(small_index):
     buf = core.PrefetchBuffer(small_index.paged, num_pages=64)
     loaded, rejected = buf.load_clusters([0, 1, 2])

@@ -3,7 +3,10 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import repro.core as core
 from repro.core.datastore import build_paged_clusters, Datastore
