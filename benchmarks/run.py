@@ -21,7 +21,7 @@ def main() -> None:
     if args.smoke:
         args.quick = True
         if args.only is None:
-            args.only = "overlap,sched"
+            args.only = "overlap,sched,admission"
 
     from benchmarks import (bench_breakdown, bench_budget, bench_hitrate,
                             bench_kernels, bench_latency, bench_nprobe,
@@ -44,6 +44,8 @@ def main() -> None:
         "breakdown": lambda: bench_breakdown.run(4 if args.quick else 8),
         "budget": lambda: bench_budget.run(
             n_queries=4 if args.quick else 16),
+        "admission": lambda: bench_budget.run_admission(
+            n_queries=4 if args.quick else 8),
         "kernels": lambda: bench_kernels.run(
             P=512 if args.quick else 2048),
     }

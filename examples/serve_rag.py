@@ -70,6 +70,14 @@ def main():
                                  micro_batch=args.micro_batch)
     print(f"cache-overlap per assignment: {[a[2] for a in rep2.assignments]}")
     print(latency_line(rep2))
+    # routing sees real memory state: per-replica ledger occupancy
+    for i, e in enumerate(orch.replicas):
+        led = e.ledger.snapshot()
+        print(f"replica {i}: prefetch={led.get('prefetch', 0)/1e6:.2f}MB "
+              f"peak={led['peak']/1e9:.2f}GB occ={e.ledger.occupancy():.2%} "
+              f"admission(admitted={e.admission.stats.admitted} "
+              f"stalled={e.admission.stats.stalled} "
+              f"spilled_pages={e.admission.stats.spilled_pages})")
 
     print("\n== wave 3: replica 1 dies; batches re-queue ==")
     rep3 = orch.run_global_batch(wave(args.requests, 5),

@@ -64,7 +64,9 @@ class ClusterCache:
 
     # -- consolidation ---------------------------------------------------------
     def quota_pages(self, buffer: PrefetchBuffer) -> int:
-        return int(self.cfg.fraction * buffer.num_pages)
+        # keyed to the prefetch quota, not the pool extent: a pool also
+        # hosting KV leases must not inflate cache retention
+        return int(self.cfg.fraction * buffer.quota_pages)
 
     def consolidate(self, buffer: PrefetchBuffer) -> List[int]:
         """Keep the hottest clusters within the cache quota; evict the rest.
@@ -83,20 +85,23 @@ class ClusterCache:
                 keep.add(c)
                 used += npg
         evict = [c for c in buffer.resident if c not in keep]
-        buffer.evict_clusters(evict)
+        buffer.evict_clusters(evict, force=True)
+        # hotness keys ⊆ resident ∪ just-fetched is an invariant (every key
+        # enters via on_fetched and leaves with its eviction), so popping
+        # the evicted set is the whole cleanup — no second full scan
         for c in evict:
             self.hotness.pop(c, None)
-        # drop hotness entries for clusters no longer resident anywhere
-        for c in list(self.hotness):
-            if c not in buffer.resident:
-                self.hotness.pop(c, None)
         return evict
 
     def make_room(self, buffer: PrefetchBuffer, pages_needed: int) -> List[int]:
-        """Evict coldest clusters until >= pages_needed slots are free."""
+        """Evict coldest *unpinned* clusters until >= pages_needed slots
+        are free (clusters pinned by an in-flight wave are untouchable —
+        this is the admission controller's spill hook)."""
         if buffer.free_pages() >= pages_needed:
             return []
-        order = sorted(buffer.resident, key=lambda c: self.hotness.get(c, 0.0))
+        pinned = buffer.pinned_clusters()
+        order = sorted((c for c in buffer.resident if c not in pinned),
+                       key=lambda c: self.hotness.get(c, 0.0))
         evicted: List[int] = []
         for c in order:
             if buffer.free_pages() >= pages_needed:

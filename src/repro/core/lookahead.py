@@ -31,6 +31,8 @@ class PrefetchPlan:
     skipped: List[int]               # skipped whole clusters (budget rule)
     bytes_planned: int = 0
     pages_planned: int = 0
+    ranked: Optional[Sequence] = None  # the ranking it was planned from, so
+                                       # a capped replan can skip the probe
 
     @property
     def covered(self) -> Set[int]:

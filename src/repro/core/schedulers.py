@@ -82,9 +82,20 @@ class Assignment:
 def assign_to_replicas(batch_clusters: Sequence[Set[int]],
                        replica_caches: Sequence[Set[int]], *,
                        max_per_replica: Optional[int] = None,
+                       occupancy: Optional[Sequence[float]] = None,
                        ) -> List[Assignment]:
     """Greedy max-overlap assignment (paper: pick the (batch, GPU) pair with
-    the greatest cached-cluster overlap, repeat in descending order)."""
+    the greatest cached-cluster overlap, repeat in descending order).
+
+    ``occupancy`` (per-replica HBM occupancy fractions from the memory
+    ledger, in [0, 1]) breaks overlap ties toward the replica with the
+    most free device memory; it is scaled well below one overlap unit so
+    it can never override a real cached-cluster advantage.
+
+    The greedy sweep masks incrementally — one O(n_b·n_r) score matrix
+    for the whole assignment instead of a fresh deep copy + full re-mask
+    per pick (the old loop was O(n_b²·n_r) in copies alone).
+    """
     n_b, n_r = len(batch_clusters), len(replica_caches)
     if n_r == 0:
         return []
@@ -93,22 +104,24 @@ def assign_to_replicas(batch_clusters: Sequence[Set[int]],
     for i, bc in enumerate(batch_clusters):
         for r, rc in enumerate(replica_caches):
             overlap[i, r] = len(bc & rc)
+    occ = (np.zeros(n_r) if occupancy is None
+           else np.clip(np.asarray(occupancy, np.float64), 0.0, 1.0))
     load = np.zeros(n_r, np.int64)
     taken = np.zeros(n_b, bool)
     out: List[Assignment] = []
-    masked = overlap.astype(np.float64).copy()
+    masked = overlap.astype(np.float64) - 1e-3 * occ[None, :]
     for _ in range(n_b):
-        masked[taken, :] = -1
-        masked[:, load >= cap] = -1
         i, r = np.unravel_index(np.argmax(masked), masked.shape)
-        if masked[i, r] < 0:     # everything capped — spill round-robin
-            i = int(np.argmin(taken))
+        if np.isneginf(masked[i, r]):    # everything capped — spill
+            i = int(np.argmin(taken))    # first untaken, round-robin
             r = int(np.argmin(load))
         out.append(Assignment(replica=int(r), batch_index=int(i),
                               overlap=int(overlap[i, r])))
         taken[int(i)] = True
         load[int(r)] += 1
-        masked = overlap.astype(np.float64).copy()
+        masked[int(i), :] = -np.inf
+        if load[int(r)] >= cap:
+            masked[:, int(r)] = -np.inf
     out.sort(key=lambda a: a.batch_index)
     return out
 
@@ -137,7 +150,9 @@ class SchedulerPolicy:
 
     def assign(self, batch_clusters: Sequence[Set[int]],
                replica_caches: Sequence[Set[int]], *,
-               max_per_replica: Optional[int] = None) -> List[Assignment]:
+               max_per_replica: Optional[int] = None,
+               occupancy: Optional[Sequence[float]] = None,
+               ) -> List[Assignment]:
         raise NotImplementedError
 
 
@@ -166,10 +181,11 @@ class TeleRAGScheduler(SchedulerPolicy):
         return _fifo_groups(q_in.shape[0], micro_batch)
 
     def assign(self, batch_clusters, replica_caches, *,
-               max_per_replica=None) -> List[Assignment]:
+               max_per_replica=None, occupancy=None) -> List[Assignment]:
         if self.cache_aware:
             return assign_to_replicas(batch_clusters, replica_caches,
-                                      max_per_replica=max_per_replica)
+                                      max_per_replica=max_per_replica,
+                                      occupancy=occupancy)
         n_r = len(replica_caches)
         return [Assignment(replica=i % n_r, batch_index=i, overlap=0)
                 for i in range(len(batch_clusters))]

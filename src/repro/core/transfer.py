@@ -27,6 +27,7 @@ from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.prefetch_buffer import PrefetchBuffer
+from repro.memory.pool import Reservation
 
 
 @dataclass(frozen=True)
@@ -76,25 +77,38 @@ class TransferEngine:
                nbytes: Optional[int] = None, link_bw: Optional[float] = None,
                kind: str = "prefetch",
                make_room: Optional[Callable[[int], object]] = None,
+               reservation: Optional[Reservation] = None,
                ) -> TransferEvent:
         """Dispatch an async copy of whole clusters; return its event.
 
         The device scatter is issued immediately through the backing
-        ``PrefetchBuffer`` (async dispatch).  ``make_room``, when given,
-        is called with a page count if the buffer rejects clusters for
-        lack of free slots, then the rejects are re-issued — mirroring the
-        legacy engine's eviction-retry path.  ``nbytes`` overrides the
-        byte count used for the occupancy window (defaults to the pages
-        actually moved); ``link_bw`` overrides the link for this copy
-        (used by the runtime-fetch baseline's modeled demand fetch).
+        ``PrefetchBuffer`` (async dispatch).  ``reservation`` is the
+        admission headroom this copy consumes its page slots from.
+        ``make_room``, when given, is called with a page count if the
+        buffer rejects clusters for lack of free slots, then the rejects
+        are re-issued — mirroring the legacy engine's eviction-retry
+        path.  ``nbytes`` overrides the byte count used for the
+        occupancy window (defaults to the pages actually moved);
+        ``link_bw`` overrides the link for this copy (used by the
+        runtime-fetch baseline's modeled demand fetch).
         """
         clusters = [int(c) for c in clusters]
-        loaded, rejected = self.buffer.load_clusters(clusters)
+        loaded, rejected = self.buffer.load_clusters(clusters,
+                                                     reservation=reservation)
         if rejected and make_room is not None:
             make_room(sum(int(self.buffer.paged.cluster_num_pages[c])
                           for c in rejected))
-            self.buffer.load_clusters(rejected)
-            rejected = []
+            _, rejected = self.buffer.load_clusters(rejected,
+                                                    reservation=reservation)
+        if rejected:
+            # never leak planned clusters silently: shrink the copy (and
+            # its modeled byte count — the link must not be occupied for
+            # pages that never moved) to what actually landed
+            dropped = set(rejected)
+            clusters = [c for c in clusters if c not in dropped]
+            if nbytes is not None:
+                nbytes = max(0, nbytes - sum(
+                    self.buffer.paged.cluster_bytes(c) for c in dropped))
         if nbytes is None:
             nbytes = sum(self.buffer.paged.cluster_bytes(c) for c in clusters)
         bw = self.link_bw if link_bw is None else float(link_bw)

@@ -46,13 +46,18 @@ def main():
     arch_full = get_arch(args.arch)
     cfg = arch_full.reduced()
     params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
-    kv = KVCacheManager(cfg)
     step = jax.jit(lambda p, c, i: tf.serve_step(p, c, i, cfg))
 
+    # one shared HBM page pool: prefetch pages + KV leases draw from (and
+    # are ledger-accounted against) the same slab, so size it for both
+    kv_bytes = KVCacheManager(cfg).nbytes(args.batch, 128)
+    page_bytes = index.paged.page_nbytes()
     eng = TeleRAGEngine(index, EngineConfig(
         nprobe=args.nprobe, top_k=3, buffer_pages=512,
+        pool_pages=512 + -(-kv_bytes // page_bytes),
         lookahead_rank=min(2 * args.nprobe, args.clusters),
         kernel_mode="ref", cache_enabled=True, chips=4), arch_full)
+    kv = KVCacheManager(cfg, pool=eng.pool)
     eng.calibrate_tcc()
     runtime = RetrievalRuntime(eng, include_tail=True)
 
@@ -102,6 +107,15 @@ def main():
           f"h2d={eng.buffer.stats.bytes_h2d/1e6:.1f}MB "
           f"cache_hit={eng.cache.hit_rate:.0%}")
     print(f"# event-clock {latency_summary(all_recs)}")
+    led = eng.ledger.snapshot()
+    adm = eng.admission.stats
+    print(f"# memory ledger: prefetch={led.get('prefetch', 0)/1e6:.2f}MB "
+          f"kv={led.get('kv', 0)/1e6:.2f}MB "
+          f"weights={led.get('weights', 0)/1e9:.2f}GB "
+          f"peak={led['peak']/1e9:.2f}GB occ={eng.ledger.occupancy():.1%}")
+    print(f"# admission: admitted={adm.admitted} stalled={adm.stalled} "
+          f"resumed={adm.resumed} capped={adm.capped} "
+          f"spilled_pages={adm.spilled_pages}")
 
 
 if __name__ == "__main__":

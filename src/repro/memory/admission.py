@@ -1,0 +1,129 @@
+"""Admission control over the shared device page pool.
+
+A wave's lookahead plan must *reserve* its page headroom up front; the
+alternative — the planner silently clamping the plan to whatever slots
+happen to be free — is exactly the failure mode the ROADMAP names ("the
+planner stalls when a prior wave fills the buffer").  The controller
+makes the reserve/stall/spill decision explicit:
+
+  1. **reserve** — if the pool can promise the pages, hand back a
+     ticket wrapping a ``Reservation``; allocation consumes it and
+     ``commit()`` returns the unused remainder.
+  2. **spill** — under pressure, first reclaim *evictable* pages (cold,
+     unpinned cluster residency) through the spill hook, then retry the
+     reservation.  Spilling is a recorded decision, not a side effect.
+  3. **stall** — if pressure comes from pages that future events will
+     free (another wave's pins, KV leases, outstanding reservations),
+     return ``None``: the caller parks the wave ``PRESSURE_STALLED`` on
+     the runtime's event queue and retries on page-free events.
+  4. **cap** — when *nothing* outstanding will ever free pages (the
+     plan simply exceeds the pool), grant what exists and mark the
+     ticket ``capped`` so telemetry shows the shortfall.  This is the
+     progress guarantee: a stall with no possible waker would deadlock.
+
+The controller never moves bytes itself; it only arbitrates the pool.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+from repro.memory.pool import DevicePagePool, Reservation
+
+
+@dataclass
+class AdmissionStats:
+    admitted: int = 0                # tickets granted with full headroom
+    stalled: int = 0                 # admit() refusals that parked a wave
+    resumed: int = 0                 # parked waves re-admitted later
+    capped: int = 0                  # tickets granted below the request
+    spilled_pages: int = 0           # pages reclaimed by the spill hook
+    shortfall_pages: int = 0         # requested-minus-granted across caps
+
+
+@dataclass(eq=False)
+class AdmissionTicket:
+    """One granted admission: the wave may allocate up to its
+    reservation; ``commit()`` after dispatch returns the remainder."""
+
+    ticket_id: int
+    owner: str
+    pages_requested: int
+    pages_granted: int
+    reservation: Optional[Reservation]
+    capped: bool = False
+    spilled_pages: int = 0
+
+
+class AdmissionController:
+    def __init__(self, pool: DevicePagePool, *,
+                 spill: Optional[Callable[[int], None]] = None):
+        """``spill(target_free_pages)`` should try to raise the pool's
+        physically-free page count to the target by evicting cold,
+        unpinned residency (best effort)."""
+        self.pool = pool
+        self.spill = spill
+        self.stats = AdmissionStats()
+        self._ids = itertools.count()
+        self.parked: List[Tuple[object, int]] = []   # (key, pages_requested)
+
+    # -- decision -----------------------------------------------------------
+    def admit(self, npages: int, owner: str, *,
+              can_wait: bool = True) -> Optional[AdmissionTicket]:
+        """Reserve ``npages`` of headroom.  None = park and retry on a
+        page-free event (only when ``can_wait`` and a future free is
+        possible); otherwise the grant may be spilled-into or capped."""
+        npages = int(npages)
+        res = self.pool.reserve(npages, owner)
+        spilled = 0
+        if res is None and self.spill is not None and npages > 0:
+            before = self.pool.free_pages()
+            # target enough physical frees to cover others' reservations too
+            self.spill(npages + self.pool.reserved_pages())
+            spilled = self.pool.free_pages() - before
+            self.stats.spilled_pages += spilled
+            res = self.pool.reserve(npages, owner)
+        if res is None:
+            if can_wait and self.holds_pending_release():
+                self.stats.stalled += 1
+                return None
+            granted = max(0, self.pool.reservable_pages())
+            res = self.pool.reserve(granted, owner) if granted else None
+            self.stats.capped += 1
+            self.stats.shortfall_pages += npages - granted
+            return AdmissionTicket(
+                ticket_id=next(self._ids), owner=owner,
+                pages_requested=npages, pages_granted=granted,
+                reservation=res, capped=True, spilled_pages=spilled)
+        self.stats.admitted += 1
+        return AdmissionTicket(
+            ticket_id=next(self._ids), owner=owner, pages_requested=npages,
+            pages_granted=npages, reservation=res, spilled_pages=spilled)
+
+    def commit(self, ticket: AdmissionTicket) -> int:
+        """Return the ticket's unconsumed headroom after dispatch."""
+        if ticket.reservation is None:
+            return 0
+        return self.pool.cancel(ticket.reservation)
+
+    def holds_pending_release(self) -> bool:
+        """True iff some current holder will free pages through a future
+        event: a pinned prefetch lease (another wave in flight), any
+        non-prefetch (e.g. KV) lease, or an outstanding reservation."""
+        if self.pool.reservations:
+            return True
+        return any(l.refcount > 1 or l.owner != "prefetch"
+                   for l in self.pool.leases.values())
+
+    # -- parking (waves waiting on page-free events) ------------------------
+    def park(self, key: object, npages: int) -> None:
+        self.parked.append((key, int(npages)))
+
+    def unpark_all(self) -> List[Tuple[object, int]]:
+        """Hand every parked wave back to the caller for a retry (the
+        retry re-enters ``admit``, so order and fairness live there)."""
+        out, self.parked = self.parked, []
+        self.stats.resumed += len(out)
+        return out

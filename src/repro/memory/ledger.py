@@ -1,0 +1,64 @@
+"""Byte-accurate device-memory ledger (one per replica).
+
+Every byte of HBM a replica spends is charged to a named category —
+``"prefetch"`` (cluster pages in the shared slab), ``"kv"`` (decode
+cache leases), ``"weights"`` (resident model parameters), or any tag a
+caller invents — and credited back when the holder releases it.  The
+ledger is pure accounting: it never allocates, so it can also track
+state the ``DevicePagePool`` does not own (weights live outside the
+slab but still compete for the same HBM).
+
+The scheduler reads ``occupancy()`` to route micro-batches away from
+memory-loaded replicas, and the serve drivers print ``snapshot()`` as
+telemetry.  Charges are exact byte counts (a KV lease is charged its
+tensor bytes, not its page-rounded slab footprint), which is what makes
+``KVCacheManager.nbytes`` testable against the ledger to the byte.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+@dataclass
+class MemoryLedger:
+    """Per-replica byte accounting across memory categories."""
+
+    capacity_bytes: Optional[int] = None     # None => unbounded (no occupancy)
+    charges: Dict[str, int] = field(default_factory=dict)
+    peak_bytes: int = 0
+
+    def charge(self, category: str, nbytes: int) -> None:
+        if nbytes < 0:
+            raise ValueError(f"negative charge: {nbytes}")
+        self.charges[category] = self.charges.get(category, 0) + int(nbytes)
+        self.peak_bytes = max(self.peak_bytes, self.total_bytes())
+
+    def credit(self, category: str, nbytes: int) -> None:
+        held = self.charges.get(category, 0)
+        if nbytes > held:
+            raise ValueError(
+                f"credit {nbytes} exceeds {category} charge {held}")
+        self.charges[category] = held - int(nbytes)
+
+    def bytes_of(self, category: str) -> int:
+        return self.charges.get(category, 0)
+
+    def total_bytes(self) -> int:
+        return sum(self.charges.values())
+
+    def occupancy(self) -> float:
+        """Fraction of capacity in use (0.0 when capacity is unknown)."""
+        if not self.capacity_bytes:
+            return 0.0
+        return min(1.0, self.total_bytes() / self.capacity_bytes)
+
+    def snapshot(self) -> Dict[str, int]:
+        """Telemetry view: per-category bytes + totals (stable keys)."""
+        out = {k: v for k, v in sorted(self.charges.items())}
+        out["total"] = self.total_bytes()
+        out["peak"] = self.peak_bytes
+        if self.capacity_bytes:
+            out["capacity"] = int(self.capacity_bytes)
+        return out

@@ -1,0 +1,255 @@
+"""Shared HBM page pool: one slab allocator for every device-memory
+consumer of a replica.
+
+TeleRAG's premise is serving RAG *under limited GPU memory*, so carving
+HBM into per-subsystem islands (a fixed prefetch slab here, an ad-hoc
+KV pool there) wastes exactly the resource the paper economizes.  The
+``DevicePagePool`` is the single arbiter: a slab of ``num_pages``
+fixed-size device page slots plus a host-side free list, handed out as
+refcounted **leases** (vLLM-style block tables — a lease's ``slots``
+are its block table, in allocation order, not necessarily contiguous).
+
+Two lease classes share the one free list:
+
+  * **slot leases** (``lease_slots``) — cluster pages for the prefetch
+    buffer; their payload is written through ONE fused donated scatter
+    per update (``scatter``), the JAX analogue of an async DMA burst;
+  * **byte leases** (``lease_bytes``) — KV/decode caches; their tensors
+    live outside the slab but their HBM footprint is charged here by
+    taking whole page slots out of circulation (``page_cluster`` stays
+    -1, so the search kernels never see them).
+
+**Reservations** let an admission controller promise headroom to a wave
+before any page is touched: ``reserve()`` subtracts from
+``reservable_pages()`` without moving slots; allocation under the
+reservation consumes it; ``cancel()`` returns the unused remainder.
+
+Every alloc/free is mirrored into the replica's ``MemoryLedger`` (exact
+bytes, not page-rounded, when the caller knows them) and broadcast to
+``subscribe``d listeners — the runtime turns those callbacks into
+page-free events that wake ``PRESSURE_STALLED`` requests.
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.datastore import PagedClusters
+from repro.memory.ledger import MemoryLedger
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _scatter_pages(pages, page_ids, page_cluster, slots, new_pages, new_ids,
+                   new_clusters):
+    """One fused slab update; out-of-range slot indices are dropped (padding)."""
+    pages = pages.at[slots].set(new_pages.astype(pages.dtype), mode="drop")
+    page_ids = page_ids.at[slots].set(new_ids, mode="drop")
+    page_cluster = page_cluster.at[slots].set(new_clusters, mode="drop")
+    return pages, page_ids, page_cluster
+
+
+def _round_up_pow2(n: int, lo: int = 8) -> int:
+    r = lo
+    while r < n:
+        r *= 2
+    return r
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when a caller demands pages the pool cannot supply."""
+
+
+@dataclass(eq=False)
+class PageLease:
+    """A refcounted hold on pool pages. ``slots`` is the block table."""
+
+    lease_id: int
+    owner: str                       # ledger category: "prefetch" | "kv" | ...
+    slots: Tuple[int, ...]
+    nbytes: int                      # exact bytes charged to the ledger
+    tag: object = None               # caller-meaningful id (cluster, request)
+    refcount: int = 1
+
+    @property
+    def num_pages(self) -> int:
+        return len(self.slots)
+
+
+@dataclass(eq=False)
+class Reservation:
+    """Admission headroom: pages promised but not yet allocated."""
+
+    res_id: int
+    owner: str
+    pages: int                       # remaining unconsumed headroom
+
+    def __repr__(self) -> str:       # short form for event logs
+        return f"Reservation({self.res_id}, {self.owner!r}, pages={self.pages})"
+
+
+class DevicePagePool:
+    def __init__(self, paged: PagedClusters, num_pages: int,
+                 dtype=jnp.bfloat16, *, ledger: Optional[MemoryLedger] = None):
+        self.paged = paged
+        self.num_pages = num_pages
+        self.dtype = dtype
+        ps, d = paged.page_size, paged.dim
+        self.pages = jnp.zeros((num_pages, ps, d), dtype)
+        self.page_ids = jnp.full((num_pages, ps), -1, jnp.int32)
+        self.page_cluster = jnp.full((num_pages,), -1, jnp.int32)
+        self.free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.ledger = ledger if ledger is not None else MemoryLedger(
+            capacity_bytes=num_pages * self.page_nbytes)
+        self.leases: Dict[int, PageLease] = {}
+        self.reservations: Dict[int, Reservation] = {}
+        self._ids = itertools.count()
+        self._subscribers: List[Callable[[int], None]] = []
+
+    # -- capacity -----------------------------------------------------------
+    @property
+    def page_nbytes(self) -> int:
+        return self.paged.page_nbytes()
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.num_pages * self.page_nbytes
+
+    def free_pages(self) -> int:
+        """Physically free slots (some may be spoken for by reservations)."""
+        return len(self.free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self.free)
+
+    def reserved_pages(self) -> int:
+        return sum(r.pages for r in self.reservations.values())
+
+    def reservable_pages(self) -> int:
+        """Free slots not already promised to an outstanding reservation."""
+        return len(self.free) - self.reserved_pages()
+
+    def leased_pages(self, owner: Optional[str] = None) -> int:
+        return sum(l.num_pages for l in self.leases.values()
+                   if owner is None or l.owner == owner)
+
+    def subscribe(self, cb: Callable[[int], None]) -> None:
+        """``cb(pages_freed)`` fires whenever slots return to the free list."""
+        self._subscribers.append(cb)
+
+    def _notify_freed(self, pages: int) -> None:
+        if pages > 0:
+            for cb in self._subscribers:
+                cb(pages)
+
+    # -- reservations -------------------------------------------------------
+    def reserve(self, npages: int, owner: str) -> Optional[Reservation]:
+        if npages > self.reservable_pages():
+            return None
+        res = Reservation(res_id=next(self._ids), owner=owner,
+                          pages=int(npages))
+        self.reservations[res.res_id] = res
+        return res
+
+    def cancel(self, res: Reservation) -> int:
+        """Release a reservation's unconsumed headroom; returns it."""
+        live = self.reservations.pop(res.res_id, None)
+        if live is None:
+            return 0
+        remainder, live.pages = live.pages, 0
+        self._notify_freed(remainder)
+        return remainder
+
+    # -- leases -------------------------------------------------------------
+    def _take_slots(self, npages: int, reservation: Optional[Reservation],
+                    ) -> Optional[List[int]]:
+        if reservation is not None and reservation.res_id in self.reservations:
+            headroom = self.reservable_pages() + reservation.pages
+        else:
+            reservation = None
+            headroom = self.reservable_pages()
+        if npages > headroom or npages > len(self.free):
+            return None
+        if reservation is not None:
+            reservation.pages = max(0, reservation.pages - npages)
+        return [self.free.pop() for _ in range(npages)]
+
+    def lease_slots(self, npages: int, owner: str = "prefetch", *,
+                    tag: object = None, nbytes: Optional[int] = None,
+                    reservation: Optional[Reservation] = None,
+                    ) -> Optional[PageLease]:
+        """Lease scatterable page slots (cluster pages). None = no room."""
+        slots = self._take_slots(npages, reservation)
+        if slots is None:
+            return None
+        nb = npages * self.page_nbytes if nbytes is None else int(nbytes)
+        lease = PageLease(lease_id=next(self._ids), owner=owner,
+                         slots=tuple(slots), nbytes=nb, tag=tag)
+        self.leases[lease.lease_id] = lease
+        self.ledger.charge(owner, nb)
+        return lease
+
+    def lease_bytes(self, nbytes: int, owner: str = "kv", *,
+                    tag: object = None,
+                    reservation: Optional[Reservation] = None,
+                    ) -> Optional[PageLease]:
+        """Charge an HBM footprint that lives outside the slab (KV cache):
+        whole page slots leave circulation, the ledger is charged the
+        exact byte count."""
+        npages = -(-int(nbytes) // self.page_nbytes)
+        return self.lease_slots(npages, owner, tag=tag, nbytes=int(nbytes),
+                                reservation=reservation)
+
+    def retain(self, lease: PageLease) -> PageLease:
+        if lease.lease_id not in self.leases:
+            raise KeyError(f"lease {lease.lease_id} is not live")
+        lease.refcount += 1
+        return lease
+
+    def release(self, lease: PageLease) -> int:
+        """Drop one reference; at zero the slots return to the free list.
+        Returns the number of pages freed (0 while references remain)."""
+        if lease.lease_id not in self.leases:
+            return 0
+        lease.refcount -= 1
+        if lease.refcount > 0:
+            return 0
+        del self.leases[lease.lease_id]
+        self.free.extend(lease.slots)
+        self.ledger.credit(lease.owner, lease.nbytes)
+        self._notify_freed(lease.num_pages)
+        return lease.num_pages
+
+    # -- device slab --------------------------------------------------------
+    def scatter(self, slot_list: Sequence[int], np_pages: Sequence[np.ndarray],
+                np_ids: Sequence[np.ndarray], np_cl: Sequence[int]) -> None:
+        """One fused donated update of the slab (pow-2 bucketed sizes so
+        recompiles stay bounded); out-of-range slots are padding."""
+        n = len(slot_list)
+        if n == 0:
+            return
+        cap = _round_up_pow2(n)
+        slots_arr = np.full(cap, self.num_pages, np.int32)   # OOB = dropped
+        slots_arr[:n] = list(slot_list)
+        pages_arr = np.zeros((cap, self.paged.page_size, self.paged.dim),
+                             np.float32)
+        pages_arr[:n] = np.stack(np_pages)
+        ids_arr = np.full((cap, self.paged.page_size), -1, np.int32)
+        ids_arr[:n] = np.stack(np_ids)
+        cl_arr = np.full(cap, -1, np.int32)
+        cl_arr[:n] = list(np_cl)
+        # async dispatch: device_put + scatter overlap with LLM decode
+        self.pages, self.page_ids, self.page_cluster = _scatter_pages(
+            self.pages, self.page_ids, self.page_cluster,
+            jnp.asarray(slots_arr), jnp.asarray(pages_arr),
+            jnp.asarray(ids_arr), jnp.asarray(cl_arr))
+
+    def device_view(self):
+        return self.pages, self.page_ids, self.page_cluster

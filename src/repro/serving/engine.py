@@ -39,6 +39,7 @@ from repro.core.hybrid_search import RetrievalResult, host_search
 from repro.core.ivf import IVFIndex
 from repro.core.prefetch_buffer import PrefetchBuffer
 from repro.core.transfer import TransferEngine, TransferEvent
+from repro.memory import (AdmissionController, DevicePagePool, MemoryLedger)
 from repro.serving.policies import (LatencyContext, RetrievalPolicy,
                                     get_policy)
 
@@ -48,6 +49,8 @@ class EngineConfig:
     nprobe: int = 256
     top_k: int = 3
     buffer_pages: int = 1024
+    pool_pages: Optional[int] = None              # None => buffer_pages (one
+                                                  # shared slab, legacy sizing)
     prefetch_budget_bytes: Optional[int] = None   # None => Appendix-C policy
     lookahead_rank: int = 512                     # clusters ranked by q_in
     mode: str = "telerag"                         # telerag|cpu_baseline|runtime_fetch
@@ -116,11 +119,29 @@ class TeleRAGEngine:
         self.index = index
         self.cfg = cfg
         self.arch = arch
-        self.buffer = PrefetchBuffer(index.paged, cfg.buffer_pages)
+        self._init_memory()
         self.transfer = TransferEngine(self.buffer, cfg.hw.host_link_bw)
         self.cache = ClusterCache(cfg.cache)
         self._rng = np.random.default_rng(cfg.seed)
         self._measured_tcc: Optional[float] = None
+
+    def _init_memory(self) -> None:
+        """One HBM arbiter per replica: page pool + byte ledger +
+        admission control, shared by prefetch buffer and KV cache."""
+        cfg = self.cfg
+        self.ledger = MemoryLedger(
+            capacity_bytes=int(cfg.hw.hbm_bytes * cfg.chips))
+        if self.arch is not None:
+            # resident model weights compete for the same HBM (bf16)
+            self.ledger.charge("weights", self.arch.param_count() * 2)
+        self.pool = DevicePagePool(
+            self.index.paged, cfg.pool_pages or cfg.buffer_pages,
+            ledger=self.ledger)
+        self.buffer = PrefetchBuffer(self.index.paged, pool=self.pool,
+                                     quota_pages=cfg.buffer_pages)
+        self.admission = AdmissionController(
+            self.pool,
+            spill=lambda target: self.cache.make_room(self.buffer, target))
 
     @property
     def policy(self) -> RetrievalPolicy:
@@ -129,16 +150,23 @@ class TeleRAGEngine:
         return get_policy(self.cfg.mode)
 
     # ---- budget -----------------------------------------------------------
+    @property
+    def prefetch_capacity_bytes(self) -> int:
+        """The prefetch share of the pool (its quota), not the whole
+        slab — budgets must not grow just because the pool also hosts
+        KV leases or extra headroom."""
+        return self.cfg.buffer_pages * self.buffer.page_nbytes
+
     def prefetch_budget(self, gen_tokens: Sequence[int], batch: int) -> int:
         if self.cfg.prefetch_budget_bytes is not None:
             return self.cfg.prefetch_budget_bytes
         if self.arch is None:
-            return self.buffer.capacity_bytes // 2
+            return self.prefetch_capacity_bytes // 2
         return budget_mod.optimal_budget(
             self.arch, self.cfg.hw, gen_tokens=list(gen_tokens) or [0],
             batch=batch, nprobe=self.cfg.nprobe, t_cc=self.effective_tcc(),
             chips=self.cfg.chips,
-            hbm_headroom_bytes=float(self.buffer.capacity_bytes))
+            hbm_headroom_bytes=float(self.prefetch_capacity_bytes))
 
     def effective_tcc(self) -> float:
         if self._measured_tcc is not None:
@@ -173,8 +201,45 @@ class TeleRAGEngine:
         return nb / (self.cfg.hw.hbm_bw * self.cfg.chips) + 5e-6
 
     # ---- primitives ---------------------------------------------------------
+    def plannable_pages(self, wave_key: object = None,
+                        hit_clusters: Sequence[int] = ()) -> int:
+        """Pages a wave's *desired* plan may target — never a silent
+        clamp to transiently-free slots.  Plannable capacity is:
+
+          * physically free slots, plus
+          * pages pinned by *other* in-flight waves (their completion
+            events release them — exactly what a PRESSURE_STALLED wave
+            waits for), plus
+          * unpinned residency beyond the cache's protection quota
+            (cold leftovers the admission spill may evict right now).
+
+        Excluded: KV leases (generation state is not a fetch target),
+        the wave's own pinned working set (already its hits), the
+        ``hit_clusters`` this very plan will count as device hits (the
+        wave pins them before admission, so their pages can never be
+        reclaimed for its own fetches), and the hot residency the cache
+        quota protects (displacing it would defeat Appendix D's cache).
+        ``cfg.buffer_pages`` additionally bounds the prefetch share of a
+        pool larger than it (shared with KV) so lookahead cannot starve
+        generation state; under the default sizing (pool ==
+        buffer_pages) the bound equals the free+reclaimable term."""
+        waitable, spillable = self.buffer.reclaimable_split(wave_key,
+                                                            hit_clusters)
+        protected = (min(self.cache.quota_pages(self.buffer), spillable)
+                     if self.cfg.cache_enabled else 0)
+        reclaimable = waitable + (spillable - protected)
+        quota_left = (self.cfg.buffer_pages
+                      - (self.pool.leased_pages("prefetch") - reclaimable))
+        return max(0, min(self.pool.free_pages() + reclaimable, quota_left))
+
+    def plan_lookahead(self, q_in: np.ndarray, gen_tokens: Sequence[int], *,
+                       wave_key: object = None):
+        """The wave's *desired* prefetch plan (None for non-prefetching
+        policies) — what admission control reserves headroom for."""
+        return self.policy.plan(self, q_in, gen_tokens, wave_key=wave_key)
+
     def lookahead_ex(self, q_in: np.ndarray, gen_tokens: Sequence[int], *,
-                     now: float = 0.0,
+                     now: float = 0.0, plan=None, ticket=None,
                      ) -> Tuple[int, int, Optional[TransferEvent]]:
         """Plan + dispatch prefetch for a micro-batch of q_in embeddings.
 
@@ -183,8 +248,12 @@ class TeleRAGEngine:
         copy completes, so the subsequent decode steps overlap with it
         (the real mechanism, not only the model); the event's
         [start_t, end_t) window is the modeled link occupancy the
-        RetrievalRuntime orders against generation windows."""
-        return self.policy.lookahead(self, q_in, gen_tokens, now=now)
+        RetrievalRuntime orders against generation windows.  ``plan`` /
+        ``ticket`` carry a precomputed plan and its granted admission
+        (the runtime reserves before dispatch); direct callers omit them
+        and get synchronous spill-or-cap admission."""
+        return self.policy.lookahead(self, q_in, gen_tokens, now=now,
+                                     plan=plan, ticket=ticket)
 
     def lookahead(self, q_in: np.ndarray, gen_tokens: Sequence[int],
                   ) -> Tuple[int, int]:
@@ -211,11 +280,17 @@ class TeleRAGEngine:
             "resident": sorted(self.buffer.resident_clusters()),
             "stats": (self.buffer.stats.bytes_h2d, self.buffer.stats.pages_h2d,
                       self.buffer.stats.rounds),
+            "ledger": self.ledger.snapshot(),
         }
 
     def restore(self, snap: dict) -> None:
         """Rebuild device state from a snapshot (replica restart)."""
-        self.buffer = PrefetchBuffer(self.index.paged, self.cfg.buffer_pages)
+        listeners = list(self.pool._subscribers)
+        self._init_memory()
+        # long-lived runtimes subscribed to the old pool must keep
+        # receiving page-free events from the replacement
+        for cb in listeners:
+            self.pool.subscribe(cb)
         self.transfer = TransferEngine(self.buffer, self.cfg.hw.host_link_bw)
         self.cache = ClusterCache(self.cfg.cache)
         self.buffer.load_clusters(snap["resident"])

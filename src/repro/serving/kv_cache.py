@@ -4,6 +4,15 @@ Allocates one decode cache per (batch, max_len) bucket and recycles it
 across requests (zeroed logically via position resets — stale entries are
 masked by per-sequence ``pos``). For SSM archs the "cache" is the O(1)
 recurrent state, which must be explicitly zeroed between requests.
+
+When constructed over a ``DevicePagePool`` the manager stops being a
+memory island: every live lease charges its exact tensor bytes to the
+replica's ``MemoryLedger`` (category ``"kv"``) and takes page slots out
+of the same pool the prefetch buffer draws from, so generation state
+and retrieval state compete for — and are accounted against — the same
+HBM.  A recycled bucket keeps its pool lease (the bytes stay resident);
+``acquire`` of a new bucket that the pool cannot fit raises
+``PoolExhausted`` rather than silently overcommitting.
 """
 
 from __future__ import annotations
@@ -15,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.memory.pool import DevicePagePool, PageLease, PoolExhausted
 from repro.models import transformer as tf
 
 
@@ -23,30 +33,73 @@ class CacheLease:
     cache: dict
     batch: int
     max_len: int
+    nbytes: int = 0
+    page_lease: Optional[PageLease] = None
 
 
 class KVCacheManager:
-    def __init__(self, cfg: ArchConfig, dtype=jnp.bfloat16):
+    def __init__(self, cfg: ArchConfig, dtype=jnp.bfloat16, *,
+                 pool: Optional[DevicePagePool] = None):
         self.cfg = cfg
         self.dtype = dtype
-        self._pool: Dict[Tuple[int, int], dict] = {}
+        self.pool = pool
+        self._pool_buckets: Dict[Tuple[int, int], Tuple[dict, Optional[PageLease]]] = {}
+        self._nbytes_memo: Dict[Tuple[int, int], int] = {}
 
     def acquire(self, batch: int, max_len: int, *, fresh: bool = False,
                 ) -> CacheLease:
         key = (batch, max_len)
-        cache = self._pool.pop(key, None)
+        nbytes = self.nbytes(batch, max_len)
+        cache, page_lease = self._pool_buckets.pop(key, (None, None))
         if cache is None:
+            if self.pool is not None:
+                page_lease = self.pool.lease_bytes(nbytes, "kv", tag=key)
+                if page_lease is None and self._pool_buckets:
+                    # spill our own recycled buckets before giving up
+                    self.drop_all()
+                    page_lease = self.pool.lease_bytes(nbytes, "kv", tag=key)
+                if page_lease is None:
+                    raise PoolExhausted(
+                        f"kv cache {key} needs {nbytes} bytes; pool has "
+                        f"{self.pool.reservable_pages()} reservable pages "
+                        f"of {self.pool.page_nbytes} bytes")
             cache = tf.init_cache(self.cfg, batch, max_len, self.dtype)
         elif fresh or tf.family_kind(self.cfg) != "attn":
             # recurrent state must not leak across requests; attention
             # caches are masked by pos so zeroing is optional
             cache = jax.tree.map(lambda a: jnp.zeros_like(a), cache)
-        return CacheLease(cache=cache, batch=batch, max_len=max_len)
+        return CacheLease(cache=cache, batch=batch, max_len=max_len,
+                          nbytes=nbytes, page_lease=page_lease)
 
     def release(self, lease: CacheLease) -> None:
-        self._pool[(lease.batch, lease.max_len)] = lease.cache
+        """Return the bucket for recycling (its pool lease stays live:
+        the bytes remain resident until ``drop``/``drop_all``)."""
+        self._pool_buckets[(lease.batch, lease.max_len)] = (lease.cache,
+                                                            lease.page_lease)
+
+    def drop(self, batch: int, max_len: int) -> int:
+        """Free one recycled bucket back to the pool; returns its bytes."""
+        cache, page_lease = self._pool_buckets.pop((batch, max_len),
+                                                   (None, None))
+        if cache is None:
+            return 0
+        if page_lease is not None and self.pool is not None:
+            self.pool.release(page_lease)
+            return page_lease.nbytes
+        return self.nbytes(batch, max_len)
+
+    def drop_all(self) -> int:
+        """Free every recycled bucket (replica teardown / pressure spill)."""
+        freed = 0
+        for batch, max_len in list(self._pool_buckets):
+            freed += self.drop(batch, max_len)
+        return freed
 
     def nbytes(self, batch: int, max_len: int) -> int:
-        shapes = jax.eval_shape(
-            lambda: tf.init_cache(self.cfg, batch, max_len, self.dtype))
-        return sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(shapes))
+        key = (batch, max_len)
+        if key not in self._nbytes_memo:     # eval_shape traces init_cache;
+            shapes = jax.eval_shape(         # don't re-trace per acquire
+                lambda: tf.init_cache(self.cfg, batch, max_len, self.dtype))
+            self._nbytes_memo[key] = sum(s.size * s.dtype.itemsize
+                                         for s in jax.tree.leaves(shapes))
+        return self._nbytes_memo[key]

@@ -112,7 +112,12 @@ class MultiReplicaOrchestrator:
         else:
             batch_clusters = [set() for _ in groups]
         caches = [e.buffer.resident_clusters() for e in self.replicas]
-        assigns = self.scheduler.assign(batch_clusters, caches)
+        # routing sees real per-replica memory state: ledger occupancy
+        # (weights + prefetch pages + KV leases) breaks overlap ties
+        # toward the replica with the most free HBM
+        occupancy = [e.ledger.occupancy() for e in self.replicas]
+        assigns = self.scheduler.assign(batch_clusters, caches,
+                                        occupancy=occupancy)
         sched_s = time.perf_counter() - t0
 
         # straggler handling: re-queue micro-batches from dead replicas

@@ -24,8 +24,9 @@ import numpy as np
 
 from repro.core.hybrid_search import RetrievalResult, host_search, hybrid_retrieve
 from repro.core.ivf import probe
-from repro.core.lookahead import plan_batched_prefetch
+from repro.core.lookahead import PrefetchPlan, plan_batched_prefetch
 from repro.core.transfer import TransferEvent
+from repro.memory.admission import AdmissionTicket
 
 if TYPE_CHECKING:                                    # avoid circular import
     from repro.serving.engine import RoundTelemetry, TeleRAGEngine
@@ -55,8 +56,20 @@ class RetrievalPolicy:
     prefetches: bool = False     # does lookahead dispatch an async copy?
 
     # ---- data plane -------------------------------------------------------
+    def plan(self, engine: "TeleRAGEngine", q_in: np.ndarray,
+             gen_tokens: Sequence[int], *,
+             free_pages: Optional[int] = None, ranked=None,
+             wave_key: object = None) -> Optional[PrefetchPlan]:
+        """The *desired* lookahead plan (what the wave wants to reserve),
+        computed against the pool's full extent — transient pressure is
+        the admission controller's problem, not the planner's.  None for
+        non-prefetching policies."""
+        return None
+
     def lookahead(self, engine: "TeleRAGEngine", q_in: np.ndarray,
                   gen_tokens: Sequence[int], *, now: float = 0.0,
+                  plan: Optional[PrefetchPlan] = None,
+                  ticket: Optional[AdmissionTicket] = None,
                   ) -> Tuple[int, int, Optional[TransferEvent]]:
         """Plan + dispatch prefetch. Returns (bytes_planned, clusters,
         transfer event). Non-prefetching policies are a no-op."""
@@ -126,21 +139,48 @@ class TeleRAGPolicy(RetrievalPolicy):
     name = "telerag"
     prefetches = True
 
-    def lookahead(self, engine, q_in, gen_tokens, *, now=0.0):
+    def plan(self, engine, q_in, gen_tokens, *, free_pages=None,
+             ranked=None, wave_key=None):
         B = q_in.shape[0]
         bud = engine.prefetch_budget(gen_tokens, B)
-        ranked = probe(q_in, engine.index, min(engine.cfg.lookahead_rank,
-                                               engine.index.num_clusters))
-        # cache makes room first so the planner sees true free pages
+        if ranked is None:
+            ranked = probe(q_in, engine.index,
+                           min(engine.cfg.lookahead_rank,
+                               engine.index.num_clusters))
+        resident = engine.buffer.resident_clusters()
+        # plan against the wave's plannable extent (not transient free
+        # slots): how many pages it can actually have right now is the
+        # admission controller's reserve/stall/spill decision, never a
+        # silent clamp inside the planner
+        if free_pages is None:
+            hits = {int(c) for row in ranked for c in row} & resident
+            free_pages = engine.plannable_pages(wave_key,
+                                                hit_clusters=hits)
         plan, _ = plan_batched_prefetch(
             list(ranked), engine.index.paged, budget_bytes=bud,
-            resident=engine.buffer.resident_clusters(),
-            free_pages=engine.buffer.free_pages())
-        if plan.pages_planned > engine.buffer.free_pages():
-            engine.cache.make_room(engine.buffer, plan.pages_planned)
+            resident=resident, free_pages=free_pages)
+        plan.ranked = ranked
+        return plan
+
+    def lookahead(self, engine, q_in, gen_tokens, *, now=0.0, plan=None,
+                  ticket=None):
+        if plan is None:
+            plan = self.plan(engine, q_in, gen_tokens)
+        if ticket is None:
+            # direct (non-runtime) callers cannot park on an event queue:
+            # admit synchronously — spill, or cap with the shortfall on
+            # the admission stats rather than dropping clusters silently
+            ticket = engine.admission.admit(plan.pages_planned,
+                                            owner="lookahead",
+                                            can_wait=False)
+        if ticket.capped and ticket.pages_granted < plan.pages_planned:
+            plan = self.plan(engine, q_in, gen_tokens,
+                             free_pages=ticket.pages_granted,
+                             ranked=plan.ranked)
         if plan.fetch:
             ev = engine.transfer.submit(
                 plan.fetch, now=now, nbytes=plan.bytes_planned,
+                reservation=ticket.reservation,
                 make_room=lambda pages: engine.cache.make_room(engine.buffer,
                                                                pages))
         else:
@@ -149,7 +189,11 @@ class TeleRAGPolicy(RetrievalPolicy):
             # invalidations exactly as the legacy load path did
             engine.buffer.load_clusters([])
             ev = None
-        engine.cache.on_fetched(plan.fetch)
+        engine.admission.commit(ticket)
+        # only clusters that actually landed become cache-tracked — a
+        # rejected cluster must not leak a hotness entry
+        engine.cache.on_fetched(
+            [c for c in plan.fetch if engine.buffer.is_resident(c)])
         return plan.bytes_planned, len(plan.fetch), ev
 
     def retrieve(self, engine, q_out, *, now=0.0):

@@ -7,8 +7,16 @@ walked through a per-request state machine
 
     QUEUED -> ADMITTED -> PREFETCHING -> GENERATING -> RETRIEVING
            -> (next round | COMPLETE)
+                  |  ^
+                  v  | page-free event
+           PRESSURE_STALLED
 
 driven by a min-heap of timestamped events on a modeled wall clock.
+A round frontier first *reserves* its lookahead plan's page headroom
+with the engine's ``AdmissionController``; when the shared
+``DevicePagePool`` cannot promise the pages, the wave parks
+``PRESSURE_STALLED`` and resumes on the page-free event of a completing
+wave's pin release — the planner never silently truncates its plan.
 Prefetch copies are ``TransferEvent``s on the engine's double-buffered
 link, so overlap between a transfer and a generation window is a fact of
 the event timeline (two intersecting intervals), not a ``max()``.
@@ -53,6 +61,7 @@ from repro.serving.trace import RequestTrace
 class RequestState(str, Enum):
     QUEUED = "queued"
     ADMITTED = "admitted"
+    PRESSURE_STALLED = "pressure_stalled"   # parked: pool reservation failed
     PREFETCHING = "prefetching"
     GENERATING = "generating"
     RETRIEVING = "retrieving"
@@ -134,6 +143,7 @@ class _Group:
     plans: List[List[Tuple[int, int]]]
     cur_q: np.ndarray                        # [B, d], drifts per round
     scheduled_rounds: set = field(default_factory=set)
+    remaining: int = 0                       # members not yet COMPLETE
 
 
 class RetrievalRuntime:
@@ -156,7 +166,11 @@ class RetrievalRuntime:
         self._heap: List[Tuple[float, int, str, tuple]] = []
         self._pending: List[RequestRecord] = []
         self._batch: List[RequestRecord] = []
+        self._group_of: Dict[int, _Group] = {}     # id(record) -> group
+        self._retry_scheduled = False
         self.event_log: List[Tuple[float, str, int]] = []
+        # page-free events wake PRESSURE_STALLED waves
+        engine.pool.subscribe(self._on_pages_freed)
 
     @property
     def ctx(self) -> LatencyContext:
@@ -189,18 +203,32 @@ class RetrievalRuntime:
             rec.arrival_t += base
         for t in sorted({r.arrival_t for r in self._pending}):
             self._push(t, "admit", ())
-        while self._heap:
+        admission = self.engine.admission
+        while self._heap or admission.parked:
+            if not self._heap:
+                # every waker has fired and waves are still parked (the
+                # pressure came from holders outside the event loop, e.g.
+                # recycled KV buckets): force a capped admission so the
+                # drain terminates — the shortfall lands on admission
+                # stats, never on silently dropped work
+                self._retry_parked(self._now, force=True)
+                continue
             t, _, kind, payload = heapq.heappop(self._heap)
             self._now = max(self._now, t)
             if kind == "admit":
                 self._on_admit(t)
             elif kind == "round":
                 self._on_round(*payload, now=t)
+            elif kind == "retry":
+                self._retry_scheduled = False
+                self._retry_parked(t)
             elif kind == "mark":
                 rec, state, label = payload
                 if state is not None:
                     rec.state = state
                 self.event_log.append((t, label, rec.request_id))
+                if state is RequestState.COMPLETE:
+                    self._on_member_complete(rec, t)
         self.engine.end_batch()
         out, self._batch = self._batch, []
         return out
@@ -232,12 +260,17 @@ class RetrievalRuntime:
                     m.complete_t = now
                     m.state = RequestState.COMPLETE
                     m.timeline.append(Span("complete", now, now))
+                else:
+                    g.remaining += 1
+                    self._group_of[id(m)] = g
             g.scheduled_rounds.add(0)
             self._push(now, "round", (g, 0))
 
-    def _on_round(self, g: _Group, rnd: int, *, now: float) -> None:
-        """Group round frontier: run the engine data ops for every member
-        still active in round ``rnd``, then schedule each member's
+    def _on_round(self, g: _Group, rnd: int, force: bool = False, *,
+                  now: float) -> None:
+        """Group round frontier: reserve the round's pool headroom (or
+        park PRESSURE_STALLED), then run the engine data ops for every
+        member still active in round ``rnd`` and schedule each member's
         per-request events from its own round-start."""
         eng = self.engine
         policy = eng.policy
@@ -249,9 +282,46 @@ class RetrievalRuntime:
         gen_tokens = [g.plans[i][rnd][0] for i in active]
         act_q = g.cur_q[active]
 
+        # 0) admission: the wave's lookahead plan reserves its headroom
+        #    up front; if the pool cannot promise the pages, the whole
+        #    round parks and resumes on a page-free event — the planner
+        #    never silently truncates under someone else's pressure
+        plan = ticket = None
+        if policy.prefetches:
+            plan = eng.plan_lookahead(act_q, gen_tokens, wave_key=g.gid)
+            # pin the plan's resident hits BEFORE admission: the spill
+            # that makes room for this wave's reservation must not evict
+            # the clusters the plan counts on finding on-device
+            hit_pins = eng.buffer.pin_clusters(g.gid, plan.resident_hits)
+            # stalling is only sound if someone ELSE will free pages —
+            # the wave's own pins must not make it wait on itself
+            waitable = (eng.buffer.pages_pinned_by_others(g.gid) > 0
+                        or bool(eng.pool.reservations)
+                        or any(l.owner != "prefetch"
+                               for l in eng.pool.leases.values()))
+            ticket = eng.admission.admit(plan.pages_planned,
+                                         owner=f"g{g.gid}r{rnd}",
+                                         can_wait=waitable and not force)
+            if ticket is None:
+                # a parked wave holds nothing: keeping tentative hit pins
+                # would make other parked waves mutually wait on them —
+                # the plan is recomputed from scratch on resume anyway
+                eng.buffer.release_pins(g.gid, hit_pins)
+                eng.admission.park((g, rnd), plan.pages_planned)
+                for i in active:
+                    req = g.members[i]
+                    req.state = RequestState.PRESSURE_STALLED
+                    self.event_log.append((now, "pressure_stall",
+                                           req.request_id))
+                return
+
         # 1) lookahead prefetch keyed on the *current* query, dispatched
         #    (async) at the frontier — in flight during generation
-        nbytes, nfetch, ev = eng.lookahead_ex(act_q, gen_tokens, now=now)
+        nbytes, nfetch, ev = eng.lookahead_ex(act_q, gen_tokens, now=now,
+                                              plan=plan, ticket=ticket)
+        if plan is not None:
+            # the wave owns its fetched set too until its completion event
+            eng.buffer.pin_clusters(g.gid, plan.fetch)
 
         # 2) rewrite -> q_out (SubQ expands to num_queries rewrites)
         q_out_rows: List[np.ndarray] = []
@@ -342,3 +412,42 @@ class RetrievalRuntime:
         if continuing and (rnd + 1) not in g.scheduled_rounds:
             g.scheduled_rounds.add(rnd + 1)
             self._push(min(continuing), "round", (g, rnd + 1))
+
+    # ---- admission / memory-pressure plumbing ------------------------------
+    def _on_pages_freed(self, pages: int) -> None:
+        """Pool subscriber: pages returned to the free list wake parked
+        waves (runs inside whichever event handler freed them)."""
+        if self.engine.admission.parked and not self._retry_scheduled:
+            self._retry_scheduled = True
+            self._push(self._now, "retry", ())
+
+    def _retry_parked(self, now: float, force: bool = False) -> None:
+        """Re-admit every parked wave.  The stall interval becomes a
+        ``pressure_stall`` span and the round restarts from the resume
+        time, so admission delay shows up in admit→complete latency."""
+        for (g, rnd), _npages in self.engine.admission.unpark_all():
+            for i in range(len(g.members)):
+                if rnd >= len(g.plans[i]):
+                    continue
+                req = g.members[i]
+                rs = req.round_start[rnd]
+                if now > rs + 1e-15:
+                    req.timeline.append(Span("pressure_stall", rs, now, rnd))
+                    req.round_start[rnd] = now
+                req.state = RequestState.ADMITTED
+                self.event_log.append((now, "pressure_resume",
+                                       req.request_id))
+            self._push(now, "round", (g, rnd, force))
+
+    def _on_member_complete(self, rec: RequestRecord, t: float) -> None:
+        """Completion event: the last member out releases the group's
+        cluster pins, making its pages evictable for parked waves."""
+        g = self._group_of.pop(id(rec), None)
+        if g is None:
+            return
+        g.remaining -= 1
+        if g.remaining == 0:
+            self.engine.buffer.unpin(g.gid)
+            if self.engine.admission.parked and not self._retry_scheduled:
+                self._retry_scheduled = True
+                self._push(t, "retry", ())

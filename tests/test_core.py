@@ -181,6 +181,48 @@ def test_cache_consolidate_quota(small_index):
         assert 0 in buf.resident or 1 in buf.resident
 
 
+def test_cache_hotness_keys_subset_of_resident(small_index):
+    """Invariant the single-pass consolidate relies on: hotness keys are
+    always ⊆ resident ∪ just-fetched (every key enters via on_fetched
+    and leaves with its cluster's eviction)."""
+    buf = core.PrefetchBuffer(small_index.paged, num_pages=64)
+    cache = core.ClusterCache(core.CacheConfig(fraction=0.25))
+    rng = np.random.default_rng(4)
+    for rnd in range(6):
+        want = [int(c) for c in rng.choice(16, size=4, replace=False)]
+        loaded, rejected = buf.load_clusters(want)
+        cache.on_fetched(loaded)                 # never the rejects
+        just_fetched = set(loaded)
+        assert set(cache.hotness) <= (buf.resident_clusters()
+                                      | just_fetched)
+        cache.round_update(loaded[:2])
+        if rnd % 2:
+            cache.make_room(buf, pages_needed=buf.num_pages // 2)
+        else:
+            cache.consolidate(buf)
+        assert set(cache.hotness) <= buf.resident_clusters()
+
+
+def test_invalidation_only_flush_is_not_a_transfer_round(small_index):
+    """flush_invalidations() scatters zero new pages — it must not count
+    as an H2D transfer round (or move any bytes) in TransferStats."""
+    buf = core.PrefetchBuffer(small_index.paged, num_pages=64)
+    buf.load_clusters([0, 1, 2])
+    assert buf.stats.rounds == 1
+    bytes_before = buf.stats.bytes_h2d
+    buf.evict_clusters([1])
+    buf.flush_invalidations()                    # pure invalidation scatter
+    assert buf.stats.rounds == 1
+    assert buf.stats.bytes_h2d == bytes_before
+    assert buf.stats.pages_h2d == buf.stats.bytes_h2d // buf.page_nbytes
+    # device consistency still holds: evicted cluster unsearchable
+    assert not np.any(np.asarray(buf.page_cluster) == 1)
+    # a real load folding queued invalidations still counts exactly once
+    buf.evict_clusters([2])
+    buf.load_clusters([3])
+    assert buf.stats.rounds == 2
+
+
 def test_budget_case1_and_headroom():
     cfg = get_arch("llama3-8b")
     hw = core.TPU_V5E

@@ -47,6 +47,7 @@ def test_param_shardings_cover_all_archs():
         assert jax.tree.structure(tree) == jax.tree.structure(shapes)
 
 
+@pytest.mark.slow
 def test_manual_dp_step_with_compression():
     cfg = get_arch("llama3-8b").reduced()
     from repro.training import OptConfig, init_training

@@ -55,6 +55,7 @@ def test_smoke_forward_and_decode(arch):
     assert jnp.all(jnp.isfinite(logits.astype(jnp.float32)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_train_step_decreases_loss(arch):
     from repro.data import DataConfig, TokenStream
@@ -80,6 +81,7 @@ PARITY_ARCHS = ["llama3-8b", "gemma2-27b", "minicpm3-4b", "granite-20b",
                 "granite-moe-3b-a800m"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", PARITY_ARCHS)
 def test_decode_matches_forward(arch):
     """Greedy decode after prefill == teacher-forced full forward.
@@ -172,6 +174,7 @@ def test_param_axes_structurally_match_params():
             assert len(ax) == len(sh.shape), (arch, ax, sh.shape)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["llama3-8b", "gemma2-27b"])
 def test_int8_kv_decode_parity(arch):
     """Quantized KV decode: small logit error, identical argmax."""

@@ -43,6 +43,68 @@ def test_assignment_prefers_overlap_and_caps_load():
     assert max(loads.values()) <= 2
 
 
+def _assign_reference(batch_clusters, replica_caches, *, max_per_replica=None):
+    """The pre-optimization greedy sweep (fresh deep copy + full re-mask
+    per pick) — kept as the oracle for the incremental-masking version."""
+    n_b, n_r = len(batch_clusters), len(replica_caches)
+    if n_r == 0:
+        return []
+    cap = max_per_replica or -(-n_b // n_r)
+    overlap = np.zeros((n_b, n_r), np.int64)
+    for i, bc in enumerate(batch_clusters):
+        for r, rc in enumerate(replica_caches):
+            overlap[i, r] = len(bc & rc)
+    load = np.zeros(n_r, np.int64)
+    taken = np.zeros(n_b, bool)
+    out = []
+    for _ in range(n_b):
+        masked = overlap.astype(np.float64).copy()
+        masked[taken, :] = -1
+        masked[:, load >= cap] = -1
+        i, r = np.unravel_index(np.argmax(masked), masked.shape)
+        if masked[i, r] < 0:
+            i = int(np.argmin(taken))
+            r = int(np.argmin(load))
+        out.append((int(i), int(r), int(overlap[i, r])))
+        taken[int(i)] = True
+        load[int(r)] += 1
+    out.sort()
+    return out
+
+
+def test_assign_incremental_masking_matches_reference():
+    """The O(n_b·n_r)-masking sweep must pick identical assignments to
+    the old O(n_b²·n_r) copy-per-pick loop on a fixed seed."""
+    rng = np.random.default_rng(42)
+    for trial in range(20):
+        n_b = int(rng.integers(1, 12))
+        n_r = int(rng.integers(1, 5))
+        batches = [set(map(int, rng.choice(40, rng.integers(0, 15),
+                                           replace=False)))
+                   for _ in range(n_b)]
+        caches = [set(map(int, rng.choice(40, rng.integers(0, 20),
+                                          replace=False)))
+                  for _ in range(n_r)]
+        got = [(a.batch_index, a.replica, a.overlap)
+               for a in core.assign_to_replicas(batches, caches)]
+        assert got == _assign_reference(batches, caches), trial
+
+
+def test_assign_occupancy_breaks_ties_toward_free_memory():
+    # two replicas with identical caches: overlap ties everywhere
+    batches = [set(range(5)), set(range(5))]
+    caches = [set(range(5)), set(range(5))]
+    out = core.assign_to_replicas(batches, caches,
+                                  occupancy=[0.9, 0.1])
+    assert out[0].replica == 1                  # less-loaded HBM wins the tie
+    # but occupancy can never override a real overlap advantage
+    caches = [set(range(5)), set(range(1))]
+    out = core.assign_to_replicas([set(range(5))], caches,
+                                  occupancy=[1.0, 0.0],
+                                  max_per_replica=1)
+    assert out[0].replica == 0
+
+
 def test_straggler_requeue():
     from repro.core.schedulers import Assignment, ReplicaHealth
     h = ReplicaHealth(deadline_s=1.0)

@@ -16,6 +16,7 @@ from repro.models import rwkv6 as rw
 from repro.models import transformer as tf
 
 
+@pytest.mark.slow
 def test_rwkv6_chunked_matches_recurrent():
     cfg = get_arch("rwkv6-3b").reduced()      # chunk_size=16
     key = jax.random.PRNGKey(0)
@@ -47,6 +48,7 @@ def test_rwkv6_chunked_matches_recurrent():
     np.testing.assert_allclose(np.asarray(sh_c), np.asarray(x[:, -1, :]))
 
 
+@pytest.mark.slow
 def test_mamba2_chunked_matches_recurrent():
     cfg = get_arch("zamba2-2.7b").reduced()   # mamba2, chunk_size=16
     key = jax.random.PRNGKey(2)

@@ -22,6 +22,7 @@ def test_schedule_shape():
     assert float(schedule(jnp.asarray(100), cfg)) == pytest.approx(1e-4)
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_full_batch():
     cfg = get_arch("llama3-8b").reduced()
     opt = OptConfig(lr=1e-3, warmup_steps=0, total_steps=10)
