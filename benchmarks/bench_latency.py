@@ -12,10 +12,10 @@ import time
 import numpy as np
 
 import repro.core as core
-from repro.serving import PipelineExecutor, make_traces
+from repro.serving import make_traces
 from benchmarks.common import (NPROBE, PAPER_CLUSTER_BYTES, bench_index,
-                               bench_queries, emit, make_engine,
-                               paper_scale_tcc, write_csv)
+                               bench_queries, emit, make_server,
+                               paper_scale_tcc, serve_requests, write_csv)
 
 PAPER_4090_3B = {"hyde": 1.3, "subq": 1.85, "iter": 1.4, "irg": 2.11,
                  "flare": 1.5, "self_rag": 1.35}
@@ -62,12 +62,12 @@ def modeled_latency(result, eng, mode: str) -> float:
 def run(n_queries: int = 16):
     rows = []
     for pipe in core.PIPELINE_SIGMA:
-        eng = make_engine(buffer_pages=1024)
-        ex = PipelineExecutor(eng)
+        srv = make_server(buffer_pages=1024)
+        eng = srv.engines[0]
         q = bench_queries(n_queries, seed=21)
         traces = make_traces(pipe, n_queries, seed=22)
         t0 = time.time()
-        res = ex.execute_batch(q, traces)
+        res = serve_requests(srv, q, traces)
         wall = (time.time() - t0) * 1e6 / n_queries
         tele = np.mean([modeled_latency(r, eng, "telerag") for r in res])
         cpu = np.mean([modeled_latency(r, eng, "cpu_baseline") for r in res])

@@ -1,28 +1,22 @@
 """Fig. 11/13: multi-replica scaling and the cache ablation.
 
-Scheduling quality and cache hit rates are MEASURED; per-replica latency
-is modeled and the slowest replica bounds the batch (the paper's
-"long tail of higher-latency micro-batches" shows up the same way).
+Scheduling quality and cache hit rates are MEASURED (through the unified
+``TeleRAGServer`` front-end); per-replica latency is modeled and the
+slowest replica bounds the batch (the paper's "long tail of
+higher-latency micro-batches" shows up the same way).
 """
 
 import time
 
 import numpy as np
 
-from repro.serving import MultiReplicaOrchestrator, make_traces
+from repro.core.schedulers import TeleRAGScheduler
+from repro.serving import make_traces
 from repro.configs import get_arch
-from repro.serving import EngineConfig
-from benchmarks.common import (NPROBE, N_CLUSTERS, bench_index, bench_queries,
-                               emit, write_csv)
+from benchmarks.common import (NPROBE, N_CLUSTERS, bench_queries, emit,
+                               make_server, serve_requests,
+                               slowest_replica_latency, write_csv)
 from benchmarks.bench_latency import modeled_latency
-
-
-def _orch(n, cache):
-    cfg = EngineConfig(nprobe=NPROBE, top_k=3, buffer_pages=768,
-                       lookahead_rank=min(2 * NPROBE, N_CLUSTERS),
-                       kernel_mode="ref", cache_enabled=cache, chips=4)
-    return MultiReplicaOrchestrator(bench_index(), cfg, n,
-                                    get_arch("llama3-8b"))
 
 
 def run(replica_counts=(1, 2, 4, 8), global_batch: int = 32,
@@ -31,38 +25,34 @@ def run(replica_counts=(1, 2, 4, 8), global_batch: int = 32,
     base_qps = None
     for cache in (False, True):
         for n in replica_counts:
-            orch = _orch(n, cache)
-            q = bench_queries(global_batch, seed=41)
-            traces = make_traces(pipeline, global_batch, seed=42)
+            srv = make_server(replicas=n, cache=cache, buffer_pages=768,
+                              scheduler=TeleRAGScheduler(),
+                              micro_batch=micro_batch)
             # warm round for the cache (paper uses 512 warm queries)
             if cache:
-                orch.run_global_batch(q, traces, micro_batch=micro_batch)
+                serve_requests(srv, bench_queries(global_batch, seed=41),
+                               make_traces(pipeline, global_batch, seed=42))
+            n_waves0 = len(srv.wave_log)
             t0 = time.time()
-            rep = orch.run_global_batch(
-                bench_queries(global_batch, seed=43),
-                make_traces(pipeline, global_batch, seed=44),
-                micro_batch=micro_batch)
+            resp = serve_requests(srv, bench_queries(global_batch, seed=43),
+                                  make_traces(pipeline, global_batch,
+                                              seed=44))
             wall = time.time() - t0
-            # modeled: replicas run their micro-batches serially; the batch
-            # completes when the slowest replica finishes
-            per_replica = {}
-            for rid, results in rep.per_replica_results.items():
-                eng = orch.replicas[rid]
-                per_replica[rid] = sum(modeled_latency(r, eng, "telerag")
-                                       for r in results) / micro_batch
-            lat = max(per_replica.values()) + rep.schedule_overhead_s
+            sched_s = sum(w.sched_overhead_s
+                          for w in srv.wave_log[n_waves0:])
+            lat = slowest_replica_latency(resp, srv, micro_batch, sched_s,
+                                          modeled_latency)
             qps = global_batch / lat
             if not cache and n == replica_counts[0]:
                 base_qps = qps
-            hits = sum(rt.hits for r in rep.all_results() for rt in r.rounds)
-            miss = sum(rt.misses for r in rep.all_results()
-                       for rt in r.rounds)
+            hits = sum(rt.hits for r in resp for rt in r.rounds)
+            miss = sum(rt.misses for r in resp for rt in r.rounds)
             rows.append({
                 "replicas": n, "cache": cache,
                 "qps": round(qps, 3),
                 "scaling_vs_1": round(qps / base_qps, 3),
                 "hit_rate": round(hits / max(hits + miss, 1), 4),
-                "sched_overhead_ms": round(rep.schedule_overhead_s * 1e3, 2),
+                "sched_overhead_ms": round(sched_s * 1e3, 2),
                 "wall_s": round(wall, 2),
             })
             emit(f"scaling/{'cache' if cache else 'nocache'}/r{n}",

@@ -1,56 +1,52 @@
 """Fig. 14: scheduler benefit vs overhead (both MEASURED).
 
 Compares {both schedulers} / {prefetch scheduler only} / {neither} on the
-same global batch: overhead = wall clock of scheduling; benefit = shared-
-cluster gain within micro-batches + cache-overlap of assignments.
+same global batch through the ``TeleRAGServer`` front-end: overhead =
+wall clock of wave scheduling; benefit = shared-cluster gain within
+micro-batches + cache-overlap of assignments.
 """
 
-import time
-
-import numpy as np
-
-import repro.core as core
-from repro.configs import get_arch
-from repro.serving import EngineConfig, MultiReplicaOrchestrator, make_traces
-from benchmarks.common import (NPROBE, N_CLUSTERS, bench_index, bench_queries,
-                               emit, write_csv)
+from repro.core.schedulers import TeleRAGScheduler
+from repro.serving import make_traces
+from benchmarks.common import (NPROBE, N_CLUSTERS, bench_queries, emit,
+                               make_server, serve_requests,
+                               slowest_replica_latency, write_csv)
 from benchmarks.bench_latency import modeled_latency
 
 
 def run(global_batch: int = 32, micro_batch: int = 4, replicas: int = 4):
     rows = []
     for pre_s, cache_s in ((True, True), (True, False), (False, False)):
-        cfg = EngineConfig(nprobe=NPROBE, top_k=3, buffer_pages=768,
-                           lookahead_rank=min(2 * NPROBE, N_CLUSTERS),
-                           kernel_mode="ref", cache_enabled=True, chips=4)
-        orch = MultiReplicaOrchestrator(bench_index(), cfg, replicas,
-                                        get_arch("llama3-8b"),
-                                        use_prefetch_sched=pre_s,
-                                        use_cache_sched=cache_s)
-        # warm caches
-        orch.run_global_batch(bench_queries(global_batch, seed=51),
-                              make_traces("hyde", global_batch, seed=52),
-                              micro_batch=micro_batch)
-        rep = orch.run_global_batch(bench_queries(global_batch, seed=53),
-                                    make_traces("hyde", global_batch, seed=54),
-                                    micro_batch=micro_batch)
-        per_replica = {}
-        for rid, results in rep.per_replica_results.items():
-            eng = orch.replicas[rid]
-            per_replica[rid] = sum(modeled_latency(r, eng, "telerag")
-                                   for r in results) / micro_batch
-        lat = max(per_replica.values()) + rep.schedule_overhead_s
-        hits = sum(rt.hits for r in rep.all_results() for rt in r.rounds)
-        miss = sum(rt.misses for r in rep.all_results() for rt in r.rounds)
+        srv = make_server(replicas=replicas, cache=True, buffer_pages=768,
+                          scheduler=TeleRAGScheduler(
+                              similarity_grouping=pre_s,
+                              cache_aware=cache_s),
+                          micro_batch=micro_batch)
+
+        def serve(qseed, tseed):
+            return serve_requests(
+                srv, bench_queries(global_batch, seed=qseed),
+                make_traces("hyde", global_batch, seed=tseed))
+
+        serve(51, 52)                               # warm caches
+        n_waves0 = len(srv.wave_log)
+        resp = serve(53, 54)
+        waves = srv.wave_log[n_waves0:]
+        sched_s = sum(w.sched_overhead_s for w in waves)
+        lat = slowest_replica_latency(resp, srv, micro_batch, sched_s,
+                                      modeled_latency)
+        hits = sum(rt.hits for r in resp for rt in r.rounds)
+        miss = sum(rt.misses for r in resp for rt in r.rounds)
         tag = ("both" if cache_s else ("prefetch_only" if pre_s else "none"))
         rows.append({
             "schedulers": tag,
             "latency_ms": round(lat * 1e3, 2),
-            "sched_overhead_ms": round(rep.schedule_overhead_s * 1e3, 3),
+            "sched_overhead_ms": round(sched_s * 1e3, 3),
             "hit_rate": round(hits / max(hits + miss, 1), 4),
-            "cache_overlap": sum(a[2] for a in rep.assignments),
+            "cache_overlap": sum(a[2] for w in waves
+                                 for a in w.assignments),
         })
-        emit(f"sched/{tag}", rep.schedule_overhead_s * 1e6,
+        emit(f"sched/{tag}", sched_s * 1e6,
              f"lat_ms={rows[-1]['latency_ms']};hit={rows[-1]['hit_rate']}")
     write_csv("fig14_sched", rows)
     return rows

@@ -10,9 +10,9 @@ import time
 import numpy as np
 
 import repro.core as core
-from repro.serving import PipelineExecutor, make_traces
-from benchmarks.common import (bench_index, bench_queries, emit, make_engine,
-                               paper_scale_tcc, write_csv)
+from repro.serving import make_traces
+from benchmarks.common import (bench_index, bench_queries, emit, make_server,
+                               paper_scale_tcc, serve_requests, write_csv)
 from benchmarks.bench_latency import modeled_latency, PAPER_CLUSTER_BYTES
 
 
@@ -20,10 +20,11 @@ def run(batches=(1, 2, 4, 8), pipelines=("hyde", "subq", "irg")):
     rows = []
     for pipe in pipelines:
         for bs in batches:
-            eng = make_engine(buffer_pages=1024)
-            ex = PipelineExecutor(eng)
-            res = ex.execute_batch(bench_queries(bs, seed=31),
-                                   make_traces(pipe, bs, seed=32))
+            srv = make_server(buffer_pages=1024)
+            eng = srv.engines[0]
+            q = bench_queries(bs, seed=31)
+            traces = make_traces(pipe, bs, seed=32)
+            res = serve_requests(srv, q, traces)
             tele_lat = max(modeled_latency(r, eng, "telerag") for r in res)
             cpu_lat = max(modeled_latency(r, eng, "cpu_baseline")
                           for r in res)

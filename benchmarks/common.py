@@ -19,7 +19,8 @@ import numpy as np
 
 import repro.core as core
 from repro.configs import get_arch
-from repro.serving import EngineConfig, TeleRAGEngine
+from repro.serving import (EngineConfig, RagRequest, TeleRAGEngine,
+                           TeleRAGServer)
 
 BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                          "bench")
@@ -59,15 +60,56 @@ def bench_queries(n: int, seed: int = 1, jitter: float = 0.08) -> np.ndarray:
     return q / np.linalg.norm(q, axis=-1, keepdims=True)
 
 
-def make_engine(mode: str = "telerag", *, buffer_pages: int = 640,
-                budget_bytes=None, cache: bool = False, arch="llama3-8b",
-                chips: int = 4, seed: int = 0) -> TeleRAGEngine:
-    cfg = EngineConfig(
+def bench_cfg(mode: str = "telerag", *, buffer_pages: int = 640,
+              budget_bytes=None, cache: bool = False,
+              chips: int = 4, seed: int = 0) -> EngineConfig:
+    return EngineConfig(
         nprobe=NPROBE, top_k=TOP_K, buffer_pages=buffer_pages,
         lookahead_rank=min(2 * NPROBE, N_CLUSTERS), mode=mode,
         kernel_mode="ref", cache_enabled=cache,
         prefetch_budget_bytes=budget_bytes, chips=chips, seed=seed)
+
+
+def make_engine(mode: str = "telerag", *, buffer_pages: int = 640,
+                budget_bytes=None, cache: bool = False, arch="llama3-8b",
+                chips: int = 4, seed: int = 0) -> TeleRAGEngine:
+    cfg = bench_cfg(mode, buffer_pages=buffer_pages,
+                    budget_bytes=budget_bytes, cache=cache, chips=chips,
+                    seed=seed)
     return TeleRAGEngine(bench_index(), cfg, get_arch(arch))
+
+
+def make_server(mode: str = "telerag", *, replicas: int = 1,
+                scheduler=None, micro_batch=None, buffer_pages: int = 640,
+                budget_bytes=None, cache: bool = False, arch="llama3-8b",
+                chips: int = 4, seed: int = 0) -> TeleRAGServer:
+    """A TeleRAGServer over the shared bench index (the serving
+    front-end the benches drive instead of raw executors)."""
+    cfg = bench_cfg(mode, buffer_pages=buffer_pages,
+                    budget_bytes=budget_bytes, cache=cache, chips=chips,
+                    seed=seed)
+    return TeleRAGServer(bench_index(), cfg, replicas, get_arch(arch),
+                         scheduler=scheduler, micro_batch=micro_batch)
+
+
+def serve_requests(srv: TeleRAGServer, q, traces, arrivals=None):
+    """Submit one request per (q row, trace) and drain the server."""
+    return srv.serve([RagRequest(q=q[i], trace=traces[i],
+                                 arrival_t=(0.0 if arrivals is None
+                                            else float(arrivals[i])))
+                      for i in range(len(traces))])
+
+
+def slowest_replica_latency(resp, srv, micro_batch: int,
+                            sched_s: float, modeled) -> float:
+    """Modeled global-batch latency: replicas run their micro-batches
+    serially, the slowest replica bounds the batch (Fig. 11/13/14)."""
+    per_replica: Dict[int, float] = {}
+    for r in resp:
+        eng = srv.engines[r.replica]
+        per_replica[r.replica] = (per_replica.get(r.replica, 0.0)
+                                  + modeled(r, eng, "telerag") / micro_batch)
+    return max(per_replica.values()) + sched_s
 
 
 def paper_scale_tcc(hw=core.TPU_V5E) -> float:

@@ -21,12 +21,12 @@ def main() -> None:
     if args.smoke:
         args.quick = True
         if args.only is None:
-            args.only = "overlap,sched,admission"
+            args.only = "overlap,sched,admission,openloop"
 
     from benchmarks import (bench_breakdown, bench_budget, bench_hitrate,
                             bench_kernels, bench_latency, bench_nprobe,
-                            bench_overlap, bench_sched, bench_scaling,
-                            bench_throughput)
+                            bench_openloop, bench_overlap, bench_sched,
+                            bench_scaling, bench_throughput)
 
     benches = {
         "overlap": lambda: bench_overlap.run(64 if args.quick else 256),
@@ -48,6 +48,8 @@ def main() -> None:
             n_queries=4 if args.quick else 8),
         "kernels": lambda: bench_kernels.run(
             P=512 if args.quick else 2048),
+        "openloop": lambda: bench_openloop.run(
+            n_requests=16 if args.quick else 48),
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

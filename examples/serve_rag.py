@@ -1,10 +1,15 @@
-"""End-to-end driver: multi-replica TeleRAG serving with batched requests.
+"""End-to-end driver: multi-replica TeleRAG serving through the unified
+``TeleRAGServer`` front-end.
 
-Exercises the full Fig.-7 system: prefetching scheduler groups a global
-batch by embedding similarity, the cache-aware scheduler routes micro-
-batches to replicas, each replica runs lookahead + hybrid retrieval with
-REAL decode on a reduced LLM, and a straggler is killed mid-run to show
-the re-queue path.
+Exercises the full Fig.-7 system as ONE surface: wave 1 is closed-loop
+batch replay (simultaneous arrivals), wave 2 is an OPEN-LOOP Poisson
+arrival stream — the continuous dispatcher admits requests at their
+arrival times, routes them per wave with the cache-aware scheduler
+(reading live cache residency + ledger occupancy), and interleaves the
+replica runtimes on one shared event clock, so queue wait and
+latency-under-load are measured quantities.  Wave 3 kills a replica to
+show the re-queue path, then a replica snapshot/restore round-trips the
+admission telemetry.
 
 Run: PYTHONPATH=src python examples/serve_rag.py [--requests 24]
 """
@@ -17,13 +22,8 @@ import numpy as np
 import repro.core as core
 from repro.configs import get_arch
 from repro.core.schedulers import TeleRAGScheduler
-from repro.serving import (EngineConfig, MultiReplicaOrchestrator,
-                           latency_summary, make_traces)
-
-
-def latency_line(rep):
-    """Per-request admit->complete latency from the runtime event clock."""
-    return latency_summary(rep.records)
+from repro.serving import (EngineConfig, RagRequest, TeleRAGServer,
+                           make_traces, summarize_latency)
 
 
 def main():
@@ -32,6 +32,8 @@ def main():
     ap.add_argument("--replicas", type=int, default=3)
     ap.add_argument("--micro-batch", type=int, default=4)
     ap.add_argument("--pipeline", default="hyde")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="open-loop offered load for wave 2 (modeled req/s)")
     args = ap.parse_args()
 
     store = core.synthetic_datastore(60_000, dim=160, seed=1)
@@ -39,61 +41,76 @@ def main():
     cfg = EngineConfig(nprobe=24, top_k=3, buffer_pages=384,
                        lookahead_rank=48, kernel_mode="ref",
                        cache_enabled=True, chips=4)
-    orch = MultiReplicaOrchestrator(index, cfg, args.replicas,
-                                    get_arch("llama3-8b"),
-                                    scheduler=TeleRAGScheduler())
+    srv = TeleRAGServer(index, cfg, args.replicas, get_arch("llama3-8b"),
+                        scheduler=TeleRAGScheduler(),
+                        micro_batch=args.micro_batch)
 
     rng = np.random.default_rng(2)
 
-    def wave(n, seed):
+    def wave(n):
         q = store.embeddings[rng.choice(store.num_vectors, n)]
         q = q + 0.05 * rng.standard_normal(q.shape).astype(np.float32)
         return q / np.linalg.norm(q, axis=-1, keepdims=True)
 
-    print(f"== wave 1: {args.requests} requests on {args.replicas} replicas ==")
+    print(f"== wave 1: {args.requests} simultaneous requests on "
+          f"{args.replicas} replicas ==")
+    q1 = wave(args.requests)
+    traces = make_traces(args.pipeline, args.requests, seed=3)
     t0 = time.time()
-    rep = orch.run_global_batch(wave(args.requests, 3),
-                                make_traces(args.pipeline, args.requests,
-                                            seed=3),
-                                micro_batch=args.micro_batch)
-    hits = sum(rt.hits for r in rep.all_results() for rt in r.rounds)
-    miss = sum(rt.misses for r in rep.all_results() for rt in r.rounds)
+    resp = srv.serve([RagRequest(q=q1[i], trace=traces[i])
+                      for i in range(args.requests)])
+    hits = sum(rt.hits for r in resp for rt in r.rounds)
+    miss = sum(rt.misses for r in resp for rt in r.rounds)
+    w = srv.wave_log[-1]
     print(f"done in {time.time()-t0:.1f}s wall; hit {hits/(hits+miss):.0%}; "
-          f"sched overhead {rep.schedule_overhead_s*1e3:.0f} ms; "
-          f"assignments {rep.assignments}")
-    print(latency_line(rep))
+          f"sched overhead {w.sched_overhead_s*1e3:.0f} ms; "
+          f"assignments {w.assignments}")
+    print(summarize_latency(resp))
 
-    print("\n== wave 2: warm caches raise routing overlap ==")
-    rep2 = orch.run_global_batch(wave(args.requests, 4),
-                                 make_traces(args.pipeline, args.requests,
-                                             seed=4),
-                                 micro_batch=args.micro_batch)
-    print(f"cache-overlap per assignment: {[a[2] for a in rep2.assignments]}")
-    print(latency_line(rep2))
-    # routing sees real memory state: per-replica ledger occupancy
-    for i, e in enumerate(orch.replicas):
-        led = e.ledger.snapshot()
-        print(f"replica {i}: prefetch={led.get('prefetch', 0)/1e6:.2f}MB "
-              f"peak={led['peak']/1e9:.2f}GB occ={e.ledger.occupancy():.2%} "
-              f"admission(admitted={e.admission.stats.admitted} "
-              f"stalled={e.admission.stats.stalled} "
-              f"spilled_pages={e.admission.stats.spilled_pages})")
+    print(f"\n== wave 2: open-loop Poisson arrivals at {args.rate:.0f} "
+          f"modeled req/s (warm caches raise routing overlap) ==")
+    q2 = wave(args.requests)
+    traces2 = make_traces(args.pipeline, args.requests, seed=4)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    n_waves0 = len(srv.wave_log)
+    resp2 = srv.serve([RagRequest(q=q2[i], trace=traces2[i],
+                                  arrival_t=float(arrivals[i]))
+                       for i in range(args.requests)])
+    waves2 = srv.wave_log[n_waves0:]
+    print(f"{len(waves2)} arrival waves; cache-overlap per assignment: "
+          f"{[a[2] for w in waves2 for a in w.assignments]}")
+    print(summarize_latency(resp2))
+    by_replica = {}
+    for r in resp2:
+        by_replica.setdefault(r.replica, []).append(r)
+    for i in sorted(by_replica):
+        rs = by_replica[i]
+        print(f"replica {i}: {len(rs)} requests, "
+              f"mean queue {np.mean([r.queue_s for r in rs])*1e3:.1f}ms")
 
-    print("\n== wave 3: replica 1 dies; batches re-queue ==")
-    rep3 = orch.run_global_batch(wave(args.requests, 5),
-                                 make_traces(args.pipeline, args.requests,
-                                             seed=5),
-                                 micro_batch=args.micro_batch,
-                                 dead_replicas={1})
-    print(f"re-queued micro-batches: {rep3.requeued}; "
-          f"all {len(rep3.all_results())} requests served")
-    print(latency_line(rep3))
+    print("\n== wave 3: replica 1 dies; micro-batches re-queue ==")
+    srv.mark_dead(1)
+    q3 = wave(args.requests)
+    traces3 = make_traces(args.pipeline, args.requests, seed=5)
+    n_waves0 = len(srv.wave_log)
+    resp3 = srv.serve([RagRequest(q=q3[i], trace=traces3[i])
+                       for i in range(args.requests)])
+    requeued = [b for w in srv.wave_log[n_waves0:] for b in w.requeued]
+    print(f"re-queued micro-batches: {requeued}; "
+          f"all {len(resp3)} requests served "
+          f"(replicas used: {sorted({r.replica for r in resp3})})")
+    print(summarize_latency(resp3))
+    srv.mark_alive(1)
+
+    print("\n== unified telemetry snapshot ==")
+    print(srv.telemetry().summary())
 
     print("\n== replica snapshot/restore (fault tolerance) ==")
-    snap = orch.replicas[0].snapshot()
-    orch.replicas[0].restore(snap)
+    snap = srv.engines[0].snapshot()
+    srv.engines[0].restore(snap)
     print(f"replica 0 restored: {len(snap['resident'])} clusters resident, "
-          f"{snap['stats'][0]/1e6:.1f} MB lifetime h2d")
+          f"{snap['stats'][0]/1e6:.1f} MB lifetime h2d, admission stats "
+          f"carried (admitted={snap['admission']['admitted']})")
 
 
 if __name__ == "__main__":

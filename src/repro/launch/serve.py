@@ -1,8 +1,13 @@
-"""Serving driver: TeleRAG engine + REAL LLM decode on local devices.
+"""Serving driver: TeleRAGServer + REAL LLM decode on local devices.
 
-End-to-end RAG serving of batched requests: lookahead prefetch is
-dispatched (async) before the pre-retrieval decode loop runs on an actual
-reduced-size model, then hybrid retrieval + post-retrieval decode.
+End-to-end RAG serving of batched requests through the unified serving
+front-end: requests are submitted as typed ``RagRequest``s and the
+server's decode hook runs an actual reduced-size model inside each round
+frontier — *after* the policy dispatched the (async) lookahead copy, so
+the real decode steps overlap the in-flight prefetch and the prefetch is
+dispatched exactly once (the legacy driver called ``eng.lookahead``
+manually and then the runtime prefetched again through the policy,
+double-counting H2D bytes).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
       --pipeline hyde --requests 8
@@ -20,9 +25,9 @@ import jax.numpy as jnp
 import repro.core as core
 from repro.configs import get_arch
 from repro.models import transformer as tf
-from repro.serving import (EngineConfig, KVCacheManager, RetrievalRuntime,
-                           TeleRAGEngine, latency_summary, make_traces,
-                           sample)
+from repro.serving import (EngineConfig, KVCacheManager, RagRequest,
+                           TeleRAGServer, make_traces, sample,
+                           summarize_latency)
 
 
 def main():
@@ -52,70 +57,54 @@ def main():
     # are ledger-accounted against) the same slab, so size it for both
     kv_bytes = KVCacheManager(cfg).nbytes(args.batch, 128)
     page_bytes = index.paged.page_nbytes()
-    eng = TeleRAGEngine(index, EngineConfig(
+
+    def decode_hook(replica, records, gen_tokens, rnd):
+        """REAL pre-retrieval decode for this round's micro-batch — runs
+        while the round's prefetch copy (dispatched just before, once,
+        by the policy) is still in flight."""
+        n = len(records)
+        lease = kv.acquire(n, 128, fresh=True)
+        tok = jnp.zeros((n,), jnp.int32)
+        for t in range(min(max(gen_tokens, default=0), 32)):
+            logits, lease.cache = step(params, lease.cache,
+                                       {"token": tok,
+                                        "pos": jnp.full((n,), t, jnp.int32)})
+            tok = sample(logits)
+        kv.release(lease)
+
+    srv = TeleRAGServer(index, EngineConfig(
         nprobe=args.nprobe, top_k=3, buffer_pages=512,
         pool_pages=512 + -(-kv_bytes // page_bytes),
         lookahead_rank=min(2 * args.nprobe, args.clusters),
-        kernel_mode="ref", cache_enabled=True, chips=4), arch_full)
+        kernel_mode="ref", cache_enabled=True, chips=4), 1, arch_full,
+        micro_batch=args.batch, include_tail=True, decode_hook=decode_hook)
+    eng = srv.engines[0]
     kv = KVCacheManager(cfg, pool=eng.pool)
     eng.calibrate_tcc()
-    runtime = RetrievalRuntime(eng, include_tail=True)
 
     rng = np.random.default_rng(args.seed + 1)
     q = store.embeddings[rng.choice(store.num_vectors, args.requests)]
     q = q + 0.05 * rng.standard_normal(q.shape).astype(np.float32)
     q /= np.linalg.norm(q, axis=-1, keepdims=True)
 
+    traces = make_traces(args.pipeline, args.requests, seed=args.seed)
     t0 = time.time()
-    done = 0
-    all_recs = []
-    for lo in range(0, args.requests, args.batch):
-        hi = min(lo + args.batch, args.requests)
-        qb = q[lo:hi]
-        traces = make_traces(args.pipeline, hi - lo, seed=args.seed + lo)
-
-        # lookahead dispatch, then REAL pre-retrieval decode overlapping it
-        nbytes, nfetch = eng.lookahead(
-            qb, [t.pre_retrieval_tokens()[0] for t in traces])
-        lease = kv.acquire(hi - lo, 128, fresh=True)
-        tok = jnp.zeros((hi - lo,), jnp.int32)
-        gen = max(t.pre_retrieval_tokens()[0] for t in traces)
-        for t in range(min(gen, 32)):
-            logits, lease.cache = step(params, lease.cache,
-                                       {"token": tok,
-                                        "pos": jnp.full((hi - lo,), t,
-                                                        jnp.int32)})
-            tok = sample(logits)
-        kv.release(lease)
-
-        # retrieval + event-clock telemetry through the runtime
-        recs = [runtime.submit(qb[i], traces[i]) for i in range(hi - lo)]
-        runtime.run()
-        all_recs.extend(recs)
-        for rec in recs:
-            r = rec.result
-            hit = sum(rt.hits for rt in r.rounds)
-            mis = sum(rt.misses for rt in r.rounds)
-            print(f"req {r.request_id:3d} [{r.pipeline}] rounds="
-                  f"{len(r.rounds)} hit_rate={hit/max(hit+mis,1):.0%} "
-                  f"admit->complete={rec.latency*1e3:7.1f}ms "
-                  f"docs={[int(d[0]) for d in r.doc_ids[:1]]}")
-        done += hi - lo
+    responses = srv.serve([RagRequest(q=q[i], trace=traces[i])
+                           for i in range(args.requests)])
     wall = time.time() - t0
-    print(f"# {done} requests in {wall:.1f}s "
-          f"({done/wall:.2f} req/s real wall on CPU); "
+    for r in responses:
+        hit = sum(rt.hits for rt in r.rounds)
+        mis = sum(rt.misses for rt in r.rounds)
+        print(f"req {r.request_id:3d} [{r.pipeline}] rounds="
+              f"{len(r.rounds)} hit_rate={hit/max(hit+mis,1):.0%} "
+              f"arrival->complete={r.latency_s*1e3:7.1f}ms "
+              f"docs={[int(d[0]) for d in r.doc_ids[:1]]}")
+    print(f"# {len(responses)} requests in {wall:.1f}s "
+          f"({len(responses)/wall:.2f} req/s real wall on CPU); "
           f"h2d={eng.buffer.stats.bytes_h2d/1e6:.1f}MB "
           f"cache_hit={eng.cache.hit_rate:.0%}")
-    print(f"# event-clock {latency_summary(all_recs)}")
-    led = eng.ledger.snapshot()
-    adm = eng.admission.stats
-    print(f"# memory ledger: prefetch={led.get('prefetch', 0)/1e6:.2f}MB "
-          f"kv={led.get('kv', 0)/1e6:.2f}MB "
-          f"weights={led.get('weights', 0)/1e9:.2f}GB "
-          f"peak={led['peak']/1e9:.2f}GB occ={eng.ledger.occupancy():.1%}")
-    print(f"# admission: admitted={adm.admitted} stalled={adm.stalled} "
-          f"resumed={adm.resumed} capped={adm.capped} "
-          f"spilled_pages={adm.spilled_pages}")
+    print(f"# event-clock {summarize_latency(responses)}")
+    print(srv.telemetry().summary())
 
 
 if __name__ == "__main__":

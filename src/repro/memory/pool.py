@@ -144,6 +144,21 @@ class DevicePagePool:
         """``cb(pages_freed)`` fires whenever slots return to the free list."""
         self._subscribers.append(cb)
 
+    def subscribers(self) -> Tuple[Callable[[int], None], ...]:
+        """The registered page-free listeners (read-only view)."""
+        return tuple(self._subscribers)
+
+    def rebind_subscribers(self, source: "DevicePagePool") -> int:
+        """Carry page-free listeners over from a replaced pool (replica
+        restart): long-lived runtimes subscribed to the old pool keep
+        receiving events from this one.  Returns how many were bound."""
+        bound = 0
+        for cb in source.subscribers():
+            if cb not in self._subscribers:
+                self._subscribers.append(cb)
+                bound += 1
+        return bound
+
     def _notify_freed(self, pages: int) -> None:
         if pages > 0:
             for cb in self._subscribers:

@@ -1,3 +1,6 @@
+from repro.serving.api import (RagRequest, RagResponse, ReplicaTelemetry,
+                               ServerTelemetry, TeleRAGServer, WaveDispatch,
+                               summarize_latency)
 from repro.serving.engine import (EngineConfig, RequestResult, RoundTelemetry,
                                   TeleRAGEngine)
 from repro.serving.kv_cache import CacheLease, KVCacheManager
@@ -14,6 +17,8 @@ from repro.serving.trace import (PIPELINES, RequestTrace, StageTrace,
                                  calibration_windows, make_trace, make_traces)
 
 __all__ = [
+    "RagRequest", "RagResponse", "ReplicaTelemetry", "ServerTelemetry",
+    "TeleRAGServer", "WaveDispatch", "summarize_latency",
     "EngineConfig", "RequestResult", "RoundTelemetry", "TeleRAGEngine",
     "CacheLease", "KVCacheManager",
     "GlobalBatchReport", "MultiReplicaOrchestrator", "PipelineExecutor",

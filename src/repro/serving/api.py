@@ -1,0 +1,524 @@
+"""Unified serving front-end: the paper's Fig. 7 system as ONE surface.
+
+The public API used to be three disjoint layers callers had to
+hand-wire — ``TeleRAGEngine`` (resources), ``RetrievalRuntime`` (one
+replica's event loop), and ``MultiReplicaOrchestrator.run_global_batch``
+(a *blocking* global batch that drained replicas serially in lockstep).
+``TeleRAGServer`` replaces that with a client-facing facade and a
+**continuous dispatcher on a shared global event clock**:
+
+  * clients ``submit()`` typed ``RagRequest``s carrying an open-loop
+    ``arrival_t`` (plus priority / SLO deadline);
+  * at each arrival *wave* the prefetching scheduler groups the wave
+    into micro-batches and the cache-aware scheduler routes them to
+    replicas (the existing ``SchedulerPolicy``, reading live per-replica
+    cache residency and ledger occupancy at the wave's clock time);
+  * micro-batches queue per replica and execute on per-replica
+    ``RetrievalRuntime``s that the dispatcher *merge-steps* — it always
+    advances the runtime holding the globally-earliest event — so
+    replica timelines interleave on one clock instead of draining one
+    replica at a time.  Open-loop throughput and latency-under-load
+    (queue wait + service) are measurable for the first time.
+
+Within a replica, one micro-batch is in flight at a time (a GPU decodes
+one micro-batch's windows at a time); queued batches dispatch the
+instant the runtime drains, and ``end_batch`` consolidation runs between
+batches exactly as the legacy executor did — which is what pins the
+legacy-equivalence guarantee: for simultaneous arrivals the server
+reproduces ``run_global_batch``'s doc ids and round telemetry to 1e-6
+(tests/test_api.py).  Per-request rounds *across* micro-batches on one
+replica are the ROADMAP follow-up this API is shaped for.
+
+``ServerTelemetry`` unifies what previously lived in four places —
+``buffer.stats``, ``cache.hit_rate``, ``ledger.snapshot()``,
+``admission.stats``, and the transfer-engine event list — into one
+snapshot the serve drivers and smoke benches print.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, replace as dc_replace
+from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple)
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.ivf import IVFIndex, probe
+from repro.core.schedulers import Assignment, SchedulerPolicy
+from repro.memory.admission import AdmissionStats
+from repro.serving.engine import (EngineConfig, RoundTelemetry,
+                                  TeleRAGEngine)
+from repro.serving.runtime import (RequestRecord, RequestState,
+                                   RetrievalRuntime, Span, percentile_line)
+from repro.serving.trace import RequestTrace, make_trace
+
+
+# ---------------------------------------------------------------------------
+# Typed request / response lifecycle
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RagRequest:
+    """One client request.
+
+    ``pipeline`` names one of the six §5.1 pipelines (the server
+    synthesizes a seeded trace); an explicit ``trace`` wins when given.
+    ``arrival_t`` is seconds after the drain epoch starts (open-loop
+    offered load); ``priority`` breaks dispatch ties in a replica's
+    queue (lower first); ``deadline_s`` is an arrival→complete SLO bound
+    stamped onto the response as ``deadline_missed``.
+    """
+
+    q: np.ndarray
+    pipeline: Optional[str] = None
+    trace: Optional[RequestTrace] = None
+    arrival_t: float = 0.0
+    priority: int = 0
+    deadline_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.trace is None and self.pipeline is None:
+            raise ValueError("RagRequest needs a pipeline name or a trace")
+
+
+@dataclass(frozen=True)
+class RagResponse:
+    """One completed request: results + its event-clock life story."""
+
+    request_id: int
+    pipeline: str
+    state: RequestState
+    replica: int
+    doc_ids: List[np.ndarray]
+    rounds: List[RoundTelemetry]
+    timeline: List[Span]
+    arrival_t: float                 # absolute, on the shared event clock
+    admit_t: float                   # dispatch onto the replica runtime
+    complete_t: float
+    deadline_missed: bool = False
+
+    @property
+    def queue_s(self) -> float:
+        """Time spent waiting for a replica slot (arrival → admit)."""
+        return self.admit_t - self.arrival_t
+
+    @property
+    def service_s(self) -> float:
+        """Admit → complete on the replica's event clock."""
+        return self.complete_t - self.admit_t
+
+    @property
+    def latency_s(self) -> float:
+        """End-to-end arrival → complete (what open-loop load inflates)."""
+        return self.complete_t - self.arrival_t
+
+    def breakdown(self) -> Dict[str, float]:
+        """Seconds per lifecycle stage: queue wait plus the summed span
+        durations (generate / transfer_wait / retrieve / pressure_stall
+        / generate_tail)."""
+        out: Dict[str, float] = {"queue": self.queue_s}
+        for s in self.timeline:
+            if s.end > s.start:
+                out[s.kind] = out.get(s.kind, 0.0) + (s.end - s.start)
+        return out
+
+
+def summarize_latency(responses: Sequence[RagResponse]) -> str:
+    """One-line nearest-rank p50/p95/mean of arrival→complete latencies
+    (the open-loop analogue of ``runtime.latency_summary``)."""
+    if not responses:
+        return "arrival->complete: no completed requests"
+    queue = float(np.mean([r.queue_s for r in responses]))
+    return (f"arrival->complete "
+            f"{percentile_line([r.latency_s for r in responses])} "
+            f"queue_mean={queue*1e3:.1f}ms")
+
+
+# ---------------------------------------------------------------------------
+# Telemetry snapshot
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ReplicaTelemetry:
+    """One replica's device-side counters at snapshot time."""
+
+    replica: int
+    bytes_h2d: int
+    pages_h2d: int
+    transfer_rounds: int
+    cache_hit_rate: float
+    ledger: Dict[str, int]
+    occupancy: float
+    admission: AdmissionStats
+    transfers: int
+    transfer_queued_s: float
+
+    @classmethod
+    def capture(cls, i: int, eng: TeleRAGEngine) -> "ReplicaTelemetry":
+        return cls(
+            replica=i,
+            bytes_h2d=eng.buffer.stats.bytes_h2d,
+            pages_h2d=eng.buffer.stats.pages_h2d,
+            transfer_rounds=eng.buffer.stats.rounds,
+            cache_hit_rate=eng.cache.hit_rate,
+            ledger=eng.ledger.snapshot(),
+            occupancy=eng.ledger.occupancy(),
+            admission=dc_replace(eng.admission.stats),
+            transfers=len(eng.transfer.events),
+            transfer_queued_s=sum(e.queued_s for e in eng.transfer.events))
+
+
+@dataclass(frozen=True)
+class ServerTelemetry:
+    """One unified snapshot of the whole serving surface (previously
+    scattered across buffer.stats, cache.hit_rate, ledger.snapshot(),
+    admission.stats, and transfer events)."""
+
+    completed: int
+    waves: int
+    dispatched_batches: int
+    clock_s: float
+    replicas: Tuple[ReplicaTelemetry, ...]
+
+    @property
+    def bytes_h2d(self) -> int:
+        return sum(r.bytes_h2d for r in self.replicas)
+
+    @property
+    def pages_h2d(self) -> int:
+        return sum(r.pages_h2d for r in self.replicas)
+
+    @property
+    def admission_stalled(self) -> int:
+        return sum(r.admission.stalled for r in self.replicas)
+
+    @property
+    def admission_admitted(self) -> int:
+        return sum(r.admission.admitted for r in self.replicas)
+
+    @property
+    def spilled_pages(self) -> int:
+        return sum(r.admission.spilled_pages for r in self.replicas)
+
+    def summary(self) -> str:
+        lines = [
+            f"server: {self.completed} completed / {self.waves} waves / "
+            f"{self.dispatched_batches} micro-batches, "
+            f"clock={self.clock_s*1e3:.1f}ms, "
+            f"h2d={self.bytes_h2d/1e6:.1f}MB, "
+            f"admission admitted={self.admission_admitted} "
+            f"stalled={self.admission_stalled} "
+            f"spilled_pages={self.spilled_pages}"]
+        for r in self.replicas:
+            led = r.ledger
+            lines.append(
+                f"  replica {r.replica}: h2d={r.bytes_h2d/1e6:.1f}MB "
+                f"cache_hit={r.cache_hit_rate:.0%} "
+                f"occ={r.occupancy:.1%} "
+                f"prefetch={led.get('prefetch', 0)/1e6:.2f}MB "
+                f"kv={led.get('kv', 0)/1e6:.2f}MB "
+                f"peak={led.get('peak', 0)/1e9:.2f}GB "
+                f"transfers={r.transfers} "
+                f"(queued {r.transfer_queued_s*1e3:.1f}ms)")
+        return "\n".join(lines)
+
+
+@dataclass(frozen=True)
+class WaveDispatch:
+    """Routing record of one arrival wave (what run_global_batch's
+    report used to expose for the whole batch)."""
+
+    t: float
+    assignments: List[Tuple[int, int, int]]   # (batch_idx, replica, overlap)
+    requeued: List[int]
+    sched_overhead_s: float
+
+
+# ---------------------------------------------------------------------------
+# The server
+# ---------------------------------------------------------------------------
+
+
+@dataclass(eq=False)
+class _Submitted:
+    seq: int
+    request: RagRequest
+    trace: RequestTrace
+    arrival_abs: float = 0.0
+    replica: int = -1
+    record: Optional[RequestRecord] = None
+
+
+@dataclass(eq=False)
+class _QueuedBatch:
+    avail_t: float                   # earliest dispatch time (wave clock)
+    priority: int
+    order: int
+    members: List[_Submitted]
+
+
+class TeleRAGServer:
+    """Client-facing facade over N replica engines + a continuous
+    cross-replica dispatcher on one shared event clock."""
+
+    def __init__(self, index: IVFIndex, cfg: EngineConfig,
+                 num_replicas: int = 1,
+                 arch: Optional[ArchConfig] = None, *,
+                 scheduler: Optional[SchedulerPolicy] = None,
+                 micro_batch: Optional[int] = None,
+                 include_tail: bool = False,
+                 batch_window_s: float = 0.0,
+                 decode_hook: Optional[Callable] = None):
+        """``scheduler=None`` forms FIFO micro-batches and routes them
+        round-robin (persistent across waves); a ``SchedulerPolicy``
+        enables the paper's similarity grouping + cache-aware routing.
+        ``micro_batch=None`` keeps each wave whole.  ``batch_window_s``
+        gathers open-loop arrivals within the window into one wave
+        (0 = every distinct arrival instant is its own wave).
+        ``decode_hook(replica, records, gen_tokens, round)`` runs real
+        decode inside each round frontier, after the async prefetch
+        dispatch — prefetch is dispatched exactly once, by the policy."""
+        self.index = index
+        self.cfg = cfg
+        self.engines = [TeleRAGEngine(index, cfg, arch)
+                        for _ in range(num_replicas)]
+        self.runtimes = [
+            RetrievalRuntime(
+                eng, include_tail=include_tail,
+                on_generate=(None if decode_hook is None else
+                             (lambda recs, toks, rnd, _r=r:
+                              decode_hook(_r, recs, toks, rnd))))
+            for r, eng in enumerate(self.engines)]
+        self.scheduler = scheduler
+        self.micro_batch = micro_batch
+        self.batch_window_s = float(batch_window_s)
+        self.dead: Set[int] = set()
+        self.nprobe_for_sched = min(64, index.num_clusters)
+        self.wave_log: List[WaveDispatch] = []
+        self.last_records: List[RequestRecord] = []
+        self.last_responses: List[RagResponse] = []
+        self._seq = itertools.count()
+        self._order = itertools.count()
+        self._inbox: List[_Submitted] = []
+        self._queues: List[List[_QueuedBatch]] = [
+            [] for _ in range(num_replicas)]
+        self._busy = [False] * num_replicas
+        self._rr = 0                       # round-robin cursor (no scheduler)
+        self._global_now = 0.0
+        self._n_completed = 0
+        self._n_waves = 0
+        self._n_batches = 0
+
+    # ---- replica health ----------------------------------------------------
+    def mark_dead(self, replica: int) -> None:
+        self.dead.add(int(replica))
+
+    def mark_alive(self, replica: int) -> None:
+        self.dead.discard(int(replica))
+
+    # ---- submission --------------------------------------------------------
+    def submit(self, request: RagRequest) -> int:
+        """Queue one request for the next drain; returns its request id."""
+        seq = next(self._seq)
+        trace = request.trace
+        if trace is None:
+            trace = make_trace(request.pipeline, seq,
+                               np.random.default_rng(self.cfg.seed + seq))
+        self._inbox.append(_Submitted(seq=seq, request=request, trace=trace))
+        return trace.request_id
+
+    def serve(self, requests: Sequence[RagRequest]) -> List[RagResponse]:
+        """submit() them all, then drain()."""
+        for r in requests:
+            self.submit(r)
+        return self.drain()
+
+    # ---- the continuous dispatcher ----------------------------------------
+    def drain(self) -> List[RagResponse]:
+        """Run the dispatcher until every submitted request completes;
+        responses come back in submission order.
+
+        The loop merges two event sources on the shared clock: arrival
+        waves (grouped + routed when their time comes) and the replica
+        runtimes' own event heaps (always stepping the globally-earliest
+        one, so replica timelines interleave)."""
+        if not self._inbox:
+            return []
+        subs, self._inbox = self._inbox, []
+        try:
+            epoch = max([self._global_now]
+                        + [rt.now for rt in self.runtimes])
+            for s in subs:
+                s.arrival_abs = epoch + max(0.0, float(s.request.arrival_t))
+            waves = self._form_waves(subs)
+            wi = 0
+            while (wi < len(waves)
+                   or any(rt.has_work() for rt in self.runtimes)):
+                nxt: Optional[Tuple[float, int]] = None
+                for r, rt in enumerate(self.runtimes):
+                    t = rt.next_event_t()
+                    if t is not None and (nxt is None or t < nxt[0]):
+                        nxt = (t, r)
+                if wi < len(waves) and (nxt is None
+                                        or waves[wi][0] <= nxt[0]):
+                    wave_t, members = waves[wi]
+                    wi += 1
+                    self._route_wave(wave_t, members)
+                else:
+                    t, r = nxt
+                    rt = self.runtimes[r]
+                    rt.step()
+                    if not rt.has_work():
+                        self._complete_batch(r)
+        except BaseException:
+            # a failed drain must not swallow work the caller handed us:
+            # requests never dispatched to a replica go back to the inbox
+            # so a retry after recovery (e.g. mark_alive) serves them;
+            # ones already on a failed runtime cannot be replayed safely
+            self._inbox = [s for s in subs if s.record is None] + self._inbox
+            raise
+        self._global_now = max([self._global_now]
+                               + [rt.now for rt in self.runtimes])
+        ordered = sorted(subs, key=lambda s: s.seq)
+        responses = [self._response(s) for s in ordered]
+        self.last_records = [s.record for s in ordered]
+        self.last_responses = responses
+        return responses
+
+    def telemetry(self) -> ServerTelemetry:
+        """One unified snapshot across every replica's counters."""
+        return ServerTelemetry(
+            completed=self._n_completed, waves=self._n_waves,
+            dispatched_batches=self._n_batches,
+            clock_s=self._global_now,
+            replicas=tuple(ReplicaTelemetry.capture(i, e)
+                           for i, e in enumerate(self.engines)))
+
+    # ---- internals ---------------------------------------------------------
+    def _form_waves(self, subs: List[_Submitted],
+                    ) -> List[Tuple[float, List[_Submitted]]]:
+        """Partition arrivals into waves.  A wave opens at its first
+        arrival and closes ``batch_window_s`` later; it fires at its
+        last member's arrival (== the first's when the window is 0)."""
+        subs = sorted(subs, key=lambda s: (s.arrival_abs, s.seq))
+        waves: List[Tuple[float, List[_Submitted]]] = []
+        cur: List[_Submitted] = []
+        t0 = 0.0
+        for s in subs:
+            if cur and s.arrival_abs - t0 > self.batch_window_s + 1e-12:
+                waves.append((cur[-1].arrival_abs, cur))
+                cur = []
+            if not cur:
+                t0 = s.arrival_abs
+            cur.append(s)
+        if cur:
+            waves.append((cur[-1].arrival_abs, cur))
+        return waves
+
+    def _route_wave(self, wave_t: float, members: List[_Submitted]) -> None:
+        """Group the wave into micro-batches and route them to replica
+        queues — reading each replica's *live* cache residency and
+        ledger occupancy at the wave's clock time."""
+        t0 = time.perf_counter()
+        q = np.stack([np.asarray(s.request.q) for s in members])
+        mb = self.micro_batch or len(members)
+        if self.scheduler is not None:
+            groups = self.scheduler.group(q, mb)
+        else:
+            groups = [list(range(i, min(i + mb, len(members))))
+                      for i in range(0, len(members), mb)]
+        if self.scheduler is not None:
+            if self.scheduler.needs_cluster_hints:
+                batch_clusters = []
+                for g in groups:
+                    ranked = probe(q[g], self.index, self.nprobe_for_sched)
+                    batch_clusters.append(
+                        set(int(c) for r in ranked for c in r))
+            else:
+                batch_clusters = [set() for _ in groups]
+            caches = [e.buffer.resident_clusters() for e in self.engines]
+            occupancy = [e.ledger.occupancy() for e in self.engines]
+            assigns = self.scheduler.assign(batch_clusters, caches,
+                                            occupancy=occupancy)
+        else:
+            assigns = []
+            for i in range(len(groups)):
+                assigns.append(Assignment(
+                    replica=self._rr % len(self.engines),
+                    batch_index=i, overlap=0))
+                self._rr += 1
+        alive = [i for i in range(len(self.engines)) if i not in self.dead]
+        if not alive:
+            raise RuntimeError("no healthy replicas")
+        requeued: List[int] = []
+        fixed: List[Assignment] = []
+        for a in assigns:
+            if a.replica in self.dead:
+                requeued.append(a.batch_index)
+                a = Assignment(replica=alive[a.batch_index % len(alive)],
+                               batch_index=a.batch_index, overlap=0)
+            fixed.append(a)
+        self.wave_log.append(WaveDispatch(
+            t=wave_t,
+            assignments=[(a.batch_index, a.replica, a.overlap)
+                         for a in fixed],
+            requeued=requeued,
+            sched_overhead_s=time.perf_counter() - t0))
+        self._n_waves += 1
+        touched = []
+        for a in fixed:
+            batch = [members[i] for i in groups[a.batch_index]]
+            for s in batch:
+                s.replica = a.replica
+            self._queues[a.replica].append(_QueuedBatch(
+                avail_t=wave_t,
+                priority=min(s.request.priority for s in batch),
+                order=next(self._order), members=batch))
+            touched.append(a.replica)
+        for r in dict.fromkeys(touched):
+            self._maybe_dispatch(r)
+
+    def _maybe_dispatch(self, r: int) -> None:
+        """Feed the replica's next queued micro-batch to its runtime the
+        moment it is idle — at the later of the wave's clock time and
+        the runtime's own clock (head-of-line service)."""
+        if self._busy[r] or not self._queues[r]:
+            return
+        qr = self._queues[r]
+        pick = min(range(len(qr)), key=lambda i: (qr[i].priority,
+                                                  qr[i].order))
+        batch = qr.pop(pick)
+        rt = self.runtimes[r]
+        t_disp = max(batch.avail_t, rt.now)
+        for s in batch.members:
+            s.record = rt.submit(s.request.q, s.trace, arrival_t=t_disp)
+        rt.begin(rebase=False)
+        self._busy[r] = True
+        self._n_batches += 1
+
+    def _complete_batch(self, r: int) -> None:
+        """A replica drained its in-flight micro-batch: consolidate the
+        engine (end_batch, as the legacy per-group executor did) and
+        dispatch the next queued batch at the replica's clock."""
+        recs = self.runtimes[r].collect()
+        self._n_completed += len(recs)
+        self._busy[r] = False
+        self._maybe_dispatch(r)
+
+    def _response(self, s: _Submitted) -> RagResponse:
+        rec = s.record
+        missed = (s.request.deadline_s is not None
+                  and (rec.complete_t - s.arrival_abs
+                       > s.request.deadline_s + 1e-12))
+        return RagResponse(
+            request_id=rec.request_id, pipeline=rec.pipeline,
+            state=rec.state, replica=s.replica,
+            doc_ids=list(rec.result.doc_ids),
+            rounds=list(rec.result.rounds),
+            timeline=list(rec.timeline),
+            arrival_t=s.arrival_abs, admit_t=rec.admit_t,
+            complete_t=rec.complete_t, deadline_missed=missed)

@@ -24,6 +24,7 @@ host search, whose per-cluster cost t_cc can be measured and plugged in.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -39,7 +40,8 @@ from repro.core.hybrid_search import RetrievalResult, host_search
 from repro.core.ivf import IVFIndex
 from repro.core.prefetch_buffer import PrefetchBuffer
 from repro.core.transfer import TransferEngine, TransferEvent
-from repro.memory import (AdmissionController, DevicePagePool, MemoryLedger)
+from repro.memory import (AdmissionController, AdmissionStats,
+                          DevicePagePool, MemoryLedger)
 from repro.serving.policies import (LatencyContext, RetrievalPolicy,
                                     get_policy)
 
@@ -281,16 +283,16 @@ class TeleRAGEngine:
             "stats": (self.buffer.stats.bytes_h2d, self.buffer.stats.pages_h2d,
                       self.buffer.stats.rounds),
             "ledger": self.ledger.snapshot(),
+            "admission": dataclasses.asdict(self.admission.stats),
         }
 
     def restore(self, snap: dict) -> None:
         """Rebuild device state from a snapshot (replica restart)."""
-        listeners = list(self.pool._subscribers)
+        old_pool = self.pool
         self._init_memory()
         # long-lived runtimes subscribed to the old pool must keep
         # receiving page-free events from the replacement
-        for cb in listeners:
-            self.pool.subscribe(cb)
+        self.pool.rebind_subscribers(old_pool)
         self.transfer = TransferEngine(self.buffer, self.cfg.hw.host_link_bw)
         self.cache = ClusterCache(self.cfg.cache)
         self.buffer.load_clusters(snap["resident"])
@@ -300,3 +302,7 @@ class TeleRAGEngine:
         self.buffer.stats.bytes_h2d = b
         self.buffer.stats.pages_h2d = p
         self.buffer.stats.rounds = r
+        # a restarted replica must not silently zero its admission
+        # telemetry (older snapshots without the key keep the fresh zeros)
+        if "admission" in snap:
+            self.admission.stats = AdmissionStats(**snap["admission"])

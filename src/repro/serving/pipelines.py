@@ -1,29 +1,33 @@
-"""The six RAG pipelines (paper §5.1, Fig. 8) as trace-driven executors,
-plus the multi-replica orchestration with both schedulers (§4.2).
+"""Legacy serving facades, now thin DEPRECATED shims over the unified
+front-end in ``serving/api.py``.
 
-``PipelineExecutor`` is the legacy lockstep facade: it admits a whole
-micro-batch at t=0 into an event-driven ``RetrievalRuntime`` and drains
-it, which reproduces the old ``execute_batch`` results (same engine ops,
-same RNG stream) while the actual execution is the continuous-batching
-state machine in ``serving/runtime.py``.
+``PipelineExecutor`` admits a whole micro-batch at t=0 into an
+event-driven ``RetrievalRuntime`` and drains it — byte-identical results
+to the pre-runtime lockstep loop.
 
-``MultiReplicaOrchestrator`` implements Fig. 7 through a pluggable
-``SchedulerPolicy``: micro-batch formation (similarity grouping) and
-replica routing (cached-cluster overlap) are one strategy object, with
-deadline-based straggler re-queue on top.
+``MultiReplicaOrchestrator.run_global_batch`` routes through
+``TeleRAGServer``: one simultaneous-arrival wave, grouped and routed by
+the same ``SchedulerPolicy``, executed on the server's shared global
+event clock.  Because the server serializes micro-batches within a
+replica (with ``end_batch`` consolidation between them, exactly like the
+old serial drain) the shim reproduces the legacy doc ids and round
+telemetry to 1e-6 — pinned in tests/test_api.py.  New code should call
+``TeleRAGServer.submit``/``drain`` directly: it is the same machinery
+minus the blocking, closed-loop shape.
 """
 
 from __future__ import annotations
 
-import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.ivf import IVFIndex, probe
+from repro.core.ivf import IVFIndex
 from repro.core.schedulers import (ReplicaHealth, SchedulerPolicy,
                                    TeleRAGScheduler)
+from repro.serving.api import RagRequest, TeleRAGServer
 from repro.serving.engine import EngineConfig, RequestResult, TeleRAGEngine
 from repro.serving.runtime import (RequestRecord, RetrievalRuntime,
                                    round_plan, tail_gen_tokens)
@@ -33,9 +37,14 @@ PIPELINE_NAMES = ("hyde", "subq", "iter", "irg", "flare", "self_rag")
 
 
 class PipelineExecutor:
-    """Executes micro-batches of traced requests on a single engine."""
+    """DEPRECATED: executes micro-batches of traced requests on a single
+    engine.  Use ``TeleRAGServer`` (serving/api.py) for new code."""
 
     def __init__(self, engine: TeleRAGEngine):
+        warnings.warn(
+            "PipelineExecutor is deprecated; use TeleRAGServer "
+            "(repro.serving.api) — same machinery, typed "
+            "request/response lifecycle", DeprecationWarning, stacklevel=2)
         self.engine = engine
         self.runtime = RetrievalRuntime(engine)
         self.last_records: List[RequestRecord] = []
@@ -62,7 +71,7 @@ class PipelineExecutor:
 
 
 # ---------------------------------------------------------------------------
-# Multi-replica orchestration (Fig. 7)
+# Multi-replica orchestration (Fig. 7) — legacy report + shim
 # ---------------------------------------------------------------------------
 
 
@@ -73,78 +82,82 @@ class GlobalBatchReport:
     assignments: List[Tuple[int, int, int]]      # (batch_idx, replica, overlap)
     requeued: List[int] = field(default_factory=list)
     records: List[RequestRecord] = field(default_factory=list)
+    submission_ids: List[int] = field(default_factory=list)
 
     def all_results(self) -> List[RequestResult]:
+        """All requests' results in *submission order* (when the report
+        carries it) — never in replica-dict iteration order."""
         out: List[RequestResult] = []
         for rs in self.per_replica_results.values():
             out.extend(rs)
+        if self.submission_ids:
+            pos = {rid: i for i, rid in enumerate(self.submission_ids)}
+            out.sort(key=lambda r: pos.get(r.request_id, len(pos)))
         return out
 
 
 class MultiReplicaOrchestrator:
+    """DEPRECATED facade: the Fig.-7 orchestration now lives in
+    ``TeleRAGServer`` (a continuous cross-replica dispatcher on a shared
+    event clock).  This class keeps the old constructor surface and a
+    ``run_global_batch`` shim for closed-loop batch replay; reach the
+    server itself at ``.server`` (or construct one directly)."""
+
     def __init__(self, index: IVFIndex, cfg: EngineConfig, num_replicas: int,
                  arch=None, *, scheduler: Optional[SchedulerPolicy] = None,
                  use_prefetch_sched: bool = True,
                  use_cache_sched: bool = True):
+        self.server = TeleRAGServer(
+            index, cfg, num_replicas, arch,
+            scheduler=scheduler or TeleRAGScheduler(
+                similarity_grouping=use_prefetch_sched,
+                cache_aware=use_cache_sched))
         self.index = index
-        self.replicas = [TeleRAGEngine(index, cfg, arch)
-                         for _ in range(num_replicas)]
-        self.execs = [PipelineExecutor(e) for e in self.replicas]
-        self.scheduler = scheduler or TeleRAGScheduler(
-            similarity_grouping=use_prefetch_sched,
-            cache_aware=use_cache_sched)
         self.health = ReplicaHealth()
-        self.nprobe_for_sched = min(64, index.num_clusters)
+
+    @property
+    def replicas(self) -> List[TeleRAGEngine]:
+        return self.server.engines
+
+    @property
+    def scheduler(self) -> SchedulerPolicy:
+        return self.server.scheduler
+
+    @property
+    def nprobe_for_sched(self) -> int:
+        return self.server.nprobe_for_sched
 
     def run_global_batch(self, q_in: np.ndarray,
                          traces: Sequence[RequestTrace], *,
                          micro_batch: int = 4,
                          dead_replicas: Optional[set] = None,
                          ) -> GlobalBatchReport:
-        t0 = time.perf_counter()
-        groups = self.scheduler.group(q_in, micro_batch)
-
-        if self.scheduler.needs_cluster_hints:
-            batch_clusters = []
-            for g in groups:
-                ranked = probe(q_in[g], self.index, self.nprobe_for_sched)
-                batch_clusters.append(set(int(c) for r in ranked for c in r))
-        else:
-            batch_clusters = [set() for _ in groups]
-        caches = [e.buffer.resident_clusters() for e in self.replicas]
-        # routing sees real per-replica memory state: ledger occupancy
-        # (weights + prefetch pages + KV leases) breaks overlap ties
-        # toward the replica with the most free HBM
-        occupancy = [e.ledger.occupancy() for e in self.replicas]
-        assigns = self.scheduler.assign(batch_clusters, caches,
-                                        occupancy=occupancy)
-        sched_s = time.perf_counter() - t0
-
-        # straggler handling: re-queue micro-batches from dead replicas
-        dead = dead_replicas or set()
-        requeued: List[int] = []
-        alive = [i for i in range(len(self.replicas)) if i not in dead]
-        if not alive:
-            raise RuntimeError("no healthy replicas")
-        fixed = []
-        for a in assigns:
-            if a.replica in dead:
-                requeued.append(a.batch_index)
-                a = type(a)(replica=alive[a.batch_index % len(alive)],
-                            batch_index=a.batch_index, overlap=0)
-            fixed.append(a)
-
-        per_replica: Dict[int, List[RequestResult]] = {i: [] for i in alive}
-        records: List[RequestRecord] = []
-        for a in fixed:
-            g = groups[a.batch_index]
-            res = self.execs[a.replica].execute_batch(
-                q_in[g], [traces[i] for i in g])
-            per_replica[a.replica].extend(res)
-            records.extend(self.execs[a.replica].last_records)
+        warnings.warn(
+            "run_global_batch is deprecated; submit RagRequests to "
+            "TeleRAGServer and drain() — closed-loop batch replay is one "
+            "simultaneous-arrival wave", DeprecationWarning, stacklevel=2)
+        srv = self.server
+        prev_mb, srv.micro_batch = srv.micro_batch, micro_batch
+        # the per-call argument ADDS to replicas already mark_dead()ed on
+        # the server — it must never silently resurrect one of them
+        prev_dead = set(srv.dead)
+        srv.dead = prev_dead | set(dead_replicas or ())
+        wave_start = len(srv.wave_log)
+        try:
+            responses = srv.serve([RagRequest(q=q_in[i], trace=traces[i])
+                                   for i in range(len(traces))])
+        finally:
+            srv.micro_batch, srv.dead = prev_mb, prev_dead
+        waves = srv.wave_log[wave_start:]
+        dead = prev_dead | set(dead_replicas or ())
+        per_replica: Dict[int, List[RequestResult]] = {
+            i: [] for i in range(len(srv.engines)) if i not in dead}
+        for resp, rec in zip(responses, srv.last_records):
+            per_replica.setdefault(resp.replica, []).append(rec.result)
         return GlobalBatchReport(
             per_replica_results=per_replica,
-            schedule_overhead_s=sched_s,
-            assignments=[(a.batch_index, a.replica, a.overlap) for a in fixed],
-            requeued=requeued,
-            records=records)
+            schedule_overhead_s=sum(w.sched_overhead_s for w in waves),
+            assignments=[a for w in waves for a in w.assignments],
+            requeued=[b for w in waves for b in w.requeued],
+            records=list(srv.last_records),
+            submission_ids=[t.request_id for t in traces])

@@ -46,7 +46,7 @@ import heapq
 import itertools
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -104,15 +104,19 @@ class RequestRecord:                   # live state, and `q` is an ndarray
         return [s for s in self.timeline if s.kind == kind]
 
 
+def percentile_line(latencies: Sequence[float]) -> str:
+    """Nearest-rank p50/p95/mean/max of a latency sample, in ms."""
+    lats = np.sort(np.asarray(latencies))
+    nearest = lambda q: lats[max(0, -(-len(lats) * q // 100) - 1)]
+    return (f"p50={nearest(50)*1e3:.1f}ms p95={nearest(95)*1e3:.1f}ms "
+            f"mean={lats.mean()*1e3:.1f}ms max={lats[-1]*1e3:.1f}ms")
+
+
 def latency_summary(records: Sequence["RequestRecord"]) -> str:
     """One-line nearest-rank p50/p95/mean of admit→complete latencies."""
     if not records:
         return "admit->complete: no completed requests"
-    lats = np.sort([r.latency for r in records])
-    nearest = lambda q: lats[max(0, -(-len(lats) * q // 100) - 1)]
-    return (f"admit->complete p50={nearest(50)*1e3:.1f}ms "
-            f"p95={nearest(95)*1e3:.1f}ms mean={lats.mean()*1e3:.1f}ms "
-            f"max={lats[-1]*1e3:.1f}ms")
+    return f"admit->complete {percentile_line([r.latency for r in records])}"
 
 
 def round_plan(trace: RequestTrace) -> List[Tuple[int, int]]:
@@ -153,12 +157,21 @@ class RetrievalRuntime:
                  scheduler: Optional[SchedulerPolicy] = None,
                  micro_batch: Optional[int] = None,
                  ctx: Optional[LatencyContext] = None,
-                 include_tail: bool = False):
+                 include_tail: bool = False,
+                 on_generate: Optional[Callable[[List["RequestRecord"],
+                                                 List[int], int],
+                                                None]] = None):
         self.engine = engine
         self.scheduler = scheduler
         self.micro_batch = micro_batch
         self._ctx = ctx
         self.include_tail = include_tail
+        # decode hook: called once per round frontier, right after the
+        # async prefetch dispatch, with the active records and their
+        # generation-window token counts — serve drivers run REAL decode
+        # here so the copy is genuinely in flight underneath it (and the
+        # prefetch is dispatched exactly once, by the policy)
+        self.on_generate = on_generate
         self._rng = np.random.default_rng(engine.cfg.seed + 1)
         self._now = 0.0                      # drained clock across run()s
         self._seq = itertools.count()
@@ -195,43 +208,85 @@ class RetrievalRuntime:
     def _push(self, t: float, kind: str, payload: tuple) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
 
-    def run(self) -> List[RequestRecord]:
-        """Drain all submitted requests; return their records (submission
-        order).  Consolidates the engine (end_batch) once drained."""
-        base = self._now
-        for rec in self._pending:
-            rec.arrival_t += base
+    @property
+    def now(self) -> float:
+        """Current position on the (monotonic) event clock."""
+        return self._now
+
+    def begin(self, *, rebase: bool = True) -> None:
+        """Seed admit events for everything submitted since the last
+        wave.  ``rebase=True`` (the legacy ``run()`` path) offsets the
+        pending arrival times by the current clock; ``rebase=False``
+        treats them as *absolute* event-clock times — the
+        ``TeleRAGServer`` dispatches on one shared global clock and has
+        already placed the wave on it (clamped monotone as a guard)."""
+        if rebase:
+            base = self._now
+            for rec in self._pending:
+                rec.arrival_t += base
+        else:
+            for rec in self._pending:
+                rec.arrival_t = max(rec.arrival_t, self._now)
         for t in sorted({r.arrival_t for r in self._pending}):
             self._push(t, "admit", ())
-        admission = self.engine.admission
-        while self._heap or admission.parked:
-            if not self._heap:
-                # every waker has fired and waves are still parked (the
-                # pressure came from holders outside the event loop, e.g.
-                # recycled KV buckets): force a capped admission so the
-                # drain terminates — the shortfall lands on admission
-                # stats, never on silently dropped work
-                self._retry_parked(self._now, force=True)
-                continue
-            t, _, kind, payload = heapq.heappop(self._heap)
-            self._now = max(self._now, t)
-            if kind == "admit":
-                self._on_admit(t)
-            elif kind == "round":
-                self._on_round(*payload, now=t)
-            elif kind == "retry":
-                self._retry_scheduled = False
-                self._retry_parked(t)
-            elif kind == "mark":
-                rec, state, label = payload
-                if state is not None:
-                    rec.state = state
-                self.event_log.append((t, label, rec.request_id))
-                if state is RequestState.COMPLETE:
-                    self._on_member_complete(rec, t)
+
+    def has_work(self) -> bool:
+        """True while events remain or waves are parked on pressure."""
+        return bool(self._heap) or bool(self.engine.admission.parked)
+
+    def next_event_t(self) -> Optional[float]:
+        """Clock time of the next event this runtime would process (the
+        server's merge key across replicas); None when drained."""
+        if self._heap:
+            return self._heap[0][0]
+        if self.engine.admission.parked:
+            return self._now
+        return None
+
+    def step(self) -> float:
+        """Process exactly one event; returns the clock after it.  The
+        ``TeleRAGServer`` interleaves replicas by always stepping the
+        runtime with the globally-earliest ``next_event_t``."""
+        if not self._heap:
+            # every waker has fired and waves are still parked (the
+            # pressure came from holders outside the event loop, e.g.
+            # recycled KV buckets): force a capped admission so the
+            # drain terminates — the shortfall lands on admission
+            # stats, never on silently dropped work
+            self._retry_parked(self._now, force=True)
+            return self._now
+        t, _, kind, payload = heapq.heappop(self._heap)
+        self._now = max(self._now, t)
+        if kind == "admit":
+            self._on_admit(t)
+        elif kind == "round":
+            self._on_round(*payload, now=t)
+        elif kind == "retry":
+            self._retry_scheduled = False
+            self._retry_parked(t)
+        elif kind == "mark":
+            rec, state, label = payload
+            if state is not None:
+                rec.state = state
+            self.event_log.append((t, label, rec.request_id))
+            if state is RequestState.COMPLETE:
+                self._on_member_complete(rec, t)
+        return self._now
+
+    def collect(self) -> List[RequestRecord]:
+        """Post-drain consolidation: end_batch the engine and hand back
+        the records submitted since the last collect (submission order)."""
         self.engine.end_batch()
         out, self._batch = self._batch, []
         return out
+
+    def run(self) -> List[RequestRecord]:
+        """Drain all submitted requests; return their records (submission
+        order).  Consolidates the engine (end_batch) once drained."""
+        self.begin()
+        while self.has_work():
+            self.step()
+        return self.collect()
 
     # ---- handlers ----------------------------------------------------------
     def _on_admit(self, now: float) -> None:
@@ -322,6 +377,12 @@ class RetrievalRuntime:
         if plan is not None:
             # the wave owns its fetched set too until its completion event
             eng.buffer.pin_clusters(g.gid, plan.fetch)
+
+        # 1b) real decode (serve drivers): the copy dispatched above is
+        #     in flight while the hook's device steps run
+        if self.on_generate is not None:
+            self.on_generate([g.members[i] for i in active], gen_tokens,
+                             rnd)
 
         # 2) rewrite -> q_out (SubQ expands to num_queries rewrites)
         q_out_rows: List[np.ndarray] = []

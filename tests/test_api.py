@@ -1,0 +1,365 @@
+"""Unified serving front-end: TeleRAGServer facade, typed
+request/response lifecycle, cross-replica continuous dispatch, and the
+legacy shims.
+
+Pins the redesign's acceptance contract:
+  * simultaneous arrivals reproduce the legacy serial
+    ``run_global_batch`` drain — doc ids exactly, round telemetry to
+    1e-6 — with multiple micro-batches per replica;
+  * staggered arrivals interleave replica work on ONE shared event
+    clock (impossible under the old one-replica-at-a-time drain);
+  * per-request arrival→complete latency is monotone in offered load;
+  * results come back in submission order everywhere;
+  * the deprecated shims warn and agree with the server.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.ivf import probe
+from repro.core.schedulers import TeleRAGScheduler
+from repro.serving import (EngineConfig, GlobalBatchReport,
+                           MultiReplicaOrchestrator, PipelineExecutor,
+                           RagRequest, RequestState, TeleRAGEngine,
+                           TeleRAGServer, make_traces)
+from repro.serving.trace import RequestTrace, StageTrace
+from tests.conftest import unit_queries
+
+TELEMETRY_FIELDS = ("round_index", "batch", "gen_tokens", "t_llm_window",
+                    "bytes_prefetched", "t_prefetch", "hits", "misses",
+                    "t_host_search", "t_dev_search", "t_merge")
+
+
+def _cfg(seed=5, **kw):
+    defaults = dict(nprobe=16, top_k=3, buffer_pages=200, lookahead_rank=32,
+                    kernel_mode="ref", chips=8, cache_enabled=True,
+                    seed=seed)
+    defaults.update(kw)
+    return EngineConfig(**defaults)
+
+
+def _legacy_serial_global_batch(index, cfg, arch, n_replicas, q_in, traces,
+                                micro_batch):
+    """The pre-redesign ``run_global_batch``: route once, then drain one
+    replica at a time through per-replica lockstep executors.  Kept here
+    as the oracle the continuous dispatcher must reproduce for
+    simultaneous arrivals."""
+    engines = [TeleRAGEngine(index, cfg, arch) for _ in range(n_replicas)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        execs = [PipelineExecutor(e) for e in engines]
+    sched = TeleRAGScheduler()
+    groups = sched.group(q_in, micro_batch)
+    nprobe_sched = min(64, index.num_clusters)
+    batch_clusters = []
+    for g in groups:
+        ranked = probe(q_in[g], index, nprobe_sched)
+        batch_clusters.append(set(int(c) for r in ranked for c in r))
+    caches = [e.buffer.resident_clusters() for e in engines]
+    occupancy = [e.ledger.occupancy() for e in engines]
+    assigns = sched.assign(batch_clusters, caches, occupancy=occupancy)
+    by_id = {}
+    for a in assigns:
+        g = groups[a.batch_index]
+        res = execs[a.replica].execute_batch(q_in[g],
+                                             [traces[i] for i in g])
+        for i, r in zip(g, res):
+            by_id[traces[i].request_id] = (r, a.replica)
+    return by_id
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: simultaneous arrivals == legacy serial drain, to 1e-6
+# ---------------------------------------------------------------------------
+
+
+def test_simultaneous_arrivals_match_legacy_serial_drain(
+        small_store, small_index, rng):
+    """12 requests, micro-batch 2, 2 replicas => 3 micro-batches per
+    replica: the continuous dispatcher serializes within each replica
+    (with end_batch between batches) while replicas interleave, so doc
+    ids and round telemetry must reproduce the legacy drain exactly."""
+    q = unit_queries(small_store, rng, 12)
+    traces = make_traces("iter", 12, seed=11)
+    legacy = _legacy_serial_global_batch(
+        small_index, _cfg(), get_arch("llama3-8b"), 2, q, traces, 2)
+
+    srv = TeleRAGServer(small_index, _cfg(), 2, get_arch("llama3-8b"),
+                        scheduler=TeleRAGScheduler(), micro_batch=2)
+    resp = srv.serve([RagRequest(q=q[i], trace=traces[i])
+                      for i in range(12)])
+    assert len(resp) == 12
+    assert {r.replica for r in resp} == {0, 1}
+    per_replica_batches = {}
+    for r in resp:
+        per_replica_batches.setdefault(r.replica, set()).add(r.admit_t)
+    assert max(len(v) for v in per_replica_batches.values()) >= 3
+
+    for r in resp:
+        ref, ref_replica = legacy[r.request_id]
+        assert r.replica == ref_replica
+        assert len(r.doc_ids) == len(ref.doc_ids)
+        for got, want in zip(r.doc_ids, ref.doc_ids):
+            np.testing.assert_array_equal(got, want)
+        assert len(r.rounds) == len(ref.rounds)
+        for got, want in zip(r.rounds, ref.rounds):
+            for f in TELEMETRY_FIELDS:
+                assert getattr(got, f) == pytest.approx(getattr(want, f),
+                                                        abs=1e-6), f
+
+
+def test_run_global_batch_shim_matches_server_and_warns(
+        small_store, small_index, rng):
+    q = unit_queries(small_store, rng, 8)
+    traces = make_traces("hyde", 8, seed=3)
+    srv = TeleRAGServer(small_index, _cfg(seed=2), 2, get_arch("llama3-8b"),
+                        scheduler=TeleRAGScheduler(), micro_batch=4)
+    resp = srv.serve([RagRequest(q=q[i], trace=traces[i]) for i in range(8)])
+
+    orch = MultiReplicaOrchestrator(small_index, _cfg(seed=2), 2,
+                                    get_arch("llama3-8b"))
+    with pytest.warns(DeprecationWarning):
+        rep = orch.run_global_batch(q, make_traces("hyde", 8, seed=3),
+                                    micro_batch=4)
+    results = rep.all_results()
+    assert [r.request_id for r in results] == [r.request_id for r in resp]
+    for a, b in zip(resp, results):
+        for got, want in zip(a.doc_ids, b.doc_ids):
+            np.testing.assert_array_equal(got, want)
+        for got, want in zip(a.rounds, b.rounds):
+            for f in TELEMETRY_FIELDS:
+                assert getattr(got, f) == pytest.approx(getattr(want, f),
+                                                        abs=1e-6), f
+    # report bookkeeping survives the shim translation
+    assert sorted(a[0] for a in rep.assignments) == [0, 1]
+    assert rep.schedule_overhead_s >= 0
+    assert len(rep.records) == 8
+
+
+def test_shim_respects_server_level_mark_dead(small_store, small_index,
+                                              rng):
+    """A replica mark_dead()ed on the server stays dead through the
+    legacy shim even when the call passes no dead_replicas."""
+    q = unit_queries(small_store, rng, 8)
+    orch = MultiReplicaOrchestrator(small_index, _cfg(seed=6), 2,
+                                    get_arch("llama3-8b"))
+    orch.server.mark_dead(1)
+    with pytest.warns(DeprecationWarning):
+        rep = orch.run_global_batch(q, make_traces("hyde", 8, seed=5),
+                                    micro_batch=4)
+    assert all(a[1] != 1 for a in rep.assignments)
+    assert len(rep.all_results()) == 8
+    assert orch.server.dead == {1}          # per-call state restored
+
+
+def test_pipeline_executor_is_deprecated(small_index):
+    eng = TeleRAGEngine(small_index, _cfg(), get_arch("llama3-8b"))
+    with pytest.warns(DeprecationWarning):
+        PipelineExecutor(eng)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: staggered arrivals interleave replicas on ONE clock
+# ---------------------------------------------------------------------------
+
+
+def _long_gen_trace(request_id, gen_tokens=4000):
+    return RequestTrace(pipeline="hyde", request_id=request_id,
+                        stages=[StageTrace("generate", gen_tokens),
+                                StageTrace("retrieve"),
+                                StageTrace("generate", 8)],
+                        rewrite_sigma=0.1)
+
+
+def test_staggered_arrivals_interleave_replicas_on_shared_clock(
+        small_store, small_index):
+    """Wave B arrives mid-way through wave A's generation window and
+    runs on the OTHER replica: B's spans must lie inside A's — overlap
+    on the shared clock that the old serial drain could never express
+    (it admitted every wave of a call at its own replica-local zero and
+    blocked between calls)."""
+    cfg = _cfg(seed=7, buffer_pages=512, cache_enabled=False)
+    srv = TeleRAGServer(small_index, cfg, 2, get_arch("llama3-8b"))
+    cents = small_index.centroids / np.linalg.norm(
+        small_index.centroids, axis=-1, keepdims=True)
+    qa = cents[:2].astype(np.float32)
+    qb = cents[-2:].astype(np.float32)
+    t_llm = srv.engines[0].llm_window_seconds(4000, 2)
+    assert t_llm > 0
+    mid = 0.5 * t_llm
+
+    reqs = ([RagRequest(q=qa[i], trace=_long_gen_trace(i)) for i in range(2)]
+            + [RagRequest(q=qb[i], trace=_long_gen_trace(10 + i),
+                          arrival_t=mid) for i in range(2)])
+    resp = srv.serve(reqs)
+    a_resp, b_resp = resp[:2], resp[2:]
+    assert all(r.state == RequestState.COMPLETE for r in resp)
+    # round-robin routing: the two waves land on different replicas
+    assert {r.replica for r in a_resp} == {0}
+    assert {r.replica for r in b_resp} == {1}
+    # B admitted at its true arrival time, while A was still running
+    for b in b_resp:
+        assert b.admit_t == pytest.approx(mid)
+        assert b.queue_s == pytest.approx(0.0, abs=1e-9)
+    assert all(a.complete_t > mid for a in a_resp)
+    # cross-replica overlap as interval intersection on the one clock
+    a_spans = [s for a in a_resp for s in a.timeline if s.end > s.start]
+    b_spans = [s for b in b_resp for s in b.timeline if s.end > s.start]
+    hits = [(sa, sb) for sa in a_spans for sb in b_spans
+            if sa.overlaps(sb.start, sb.end)]
+    assert hits, (a_spans, b_spans)
+    # and replica-B work STARTED strictly inside a replica-A span
+    assert any(sa.start < sb.start < sa.end for sa, sb in hits)
+
+
+def test_latency_monotone_in_offered_load(small_store, small_index, rng):
+    """Same request stream at shrinking inter-arrival spacing: the data
+    ops are identical (same batches, same replicas), so arrival→complete
+    latency can only grow with offered load — queueing is real."""
+    q = unit_queries(small_store, rng, 6)
+    means = []
+    for spacing in (100.0, 0.01, 0.0):
+        srv = TeleRAGServer(small_index, _cfg(seed=3, cache_enabled=False),
+                            2, get_arch("llama3-8b"), micro_batch=1)
+        traces = make_traces("hyde", 6, seed=9)
+        resp = srv.serve([RagRequest(q=q[i], trace=traces[i],
+                                     arrival_t=i * spacing)
+                          for i in range(6)])
+        assert all(r.state == RequestState.COMPLETE for r in resp)
+        means.append(float(np.mean([r.latency_s for r in resp])))
+    assert means[0] <= means[1] + 1e-9 <= means[2] + 2e-9
+    # saturation genuinely queues: simultaneous arrivals wait for slots
+    assert means[2] > means[0]
+
+
+# ---------------------------------------------------------------------------
+# Submission-order guarantees
+# ---------------------------------------------------------------------------
+
+
+def test_global_batch_report_all_results_submission_order():
+    """all_results() must not depend on replica-dict iteration order."""
+    from repro.serving import RequestResult
+    r = {i: RequestResult(i, "hyde") for i in range(4)}
+    rep = GlobalBatchReport(
+        per_replica_results={1: [r[2], r[0]], 0: [r[3], r[1]]},
+        schedule_overhead_s=0.0, assignments=[],
+        submission_ids=[0, 1, 2, 3])
+    assert [x.request_id for x in rep.all_results()] == [0, 1, 2, 3]
+
+
+def test_server_drain_returns_submission_order(small_store, small_index,
+                                               rng):
+    """Later-submitted requests can arrive (and finish) earlier; the
+    drain still answers in submission order."""
+    q = unit_queries(small_store, rng, 4)
+    traces = make_traces("hyde", 4, seed=13)
+    srv = TeleRAGServer(small_index, _cfg(cache_enabled=False), 2,
+                        get_arch("llama3-8b"), micro_batch=1)
+    # reverse arrival order: request 0 arrives last
+    resp = srv.serve([RagRequest(q=q[i], trace=traces[i],
+                                 arrival_t=(3 - i) * 0.5)
+                      for i in range(4)])
+    assert [r.request_id for r in resp] == [t.request_id for t in traces]
+    assert resp[3].complete_t < resp[0].complete_t
+
+
+# ---------------------------------------------------------------------------
+# Decode hook + unified telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_decode_hook_fires_per_round_and_prefetch_dispatches_once(
+        small_store, small_index, rng):
+    """The serve drivers' real decode runs through the hook INSIDE the
+    round frontier: prefetch is dispatched exactly once (by the policy),
+    so H2D bytes match a hook-less run byte for byte — the legacy driver
+    double-prefetched by calling eng.lookahead() manually first."""
+    q = unit_queries(small_store, rng, 3)
+    traces = make_traces("iter", 3, seed=21)
+
+    srv0 = TeleRAGServer(small_index, _cfg(seed=4), 1,
+                         get_arch("llama3-8b"))
+    srv0.serve([RagRequest(q=q[i], trace=traces[i]) for i in range(3)])
+    baseline_h2d = srv0.engines[0].buffer.stats.bytes_h2d
+
+    calls = []
+    srv = TeleRAGServer(small_index, _cfg(seed=4), 1, get_arch("llama3-8b"),
+                        decode_hook=lambda r, recs, toks, rnd:
+                        calls.append((r, len(recs), tuple(toks), rnd)))
+    resp = srv.serve([RagRequest(q=q[i], trace=traces[i]) for i in range(3)])
+    n_frontiers = max(len(r.rounds) for r in resp)
+    assert len(calls) == n_frontiers
+    assert [c[3] for c in calls] == list(range(n_frontiers))
+    assert srv.engines[0].buffer.stats.bytes_h2d == baseline_h2d
+
+
+def test_server_telemetry_unifies_replica_counters(small_store, small_index,
+                                                   rng):
+    q = unit_queries(small_store, rng, 6)
+    traces = make_traces("hyde", 6, seed=17)
+    srv = TeleRAGServer(small_index, _cfg(), 2, get_arch("llama3-8b"),
+                        scheduler=TeleRAGScheduler(), micro_batch=3)
+    srv.serve([RagRequest(q=q[i], trace=traces[i]) for i in range(6)])
+    tele = srv.telemetry()
+    assert tele.completed == 6
+    assert tele.dispatched_batches >= 2
+    assert tele.bytes_h2d == sum(e.buffer.stats.bytes_h2d
+                                 for e in srv.engines)
+    for rt, eng in zip(tele.replicas, srv.engines):
+        assert rt.ledger == eng.ledger.snapshot()
+        assert rt.admission == eng.admission.stats
+        assert rt.admission is not eng.admission.stats   # a snapshot copy
+        assert 0.0 <= rt.occupancy <= 1.0
+        assert rt.transfers == len(eng.transfer.events)
+    s = tele.summary()
+    assert "server:" in s and "replica 0" in s and "replica 1" in s
+
+
+def test_response_lifecycle_fields(small_store, small_index, rng):
+    """RagResponse decomposes arrival→complete into queue + service and
+    its breakdown sums the timeline spans; deadlines are stamped."""
+    q = unit_queries(small_store, rng, 2)
+    traces = make_traces("hyde", 2, seed=19)
+    srv = TeleRAGServer(small_index, _cfg(cache_enabled=False), 1,
+                        get_arch("llama3-8b"), micro_batch=1)
+    resp = srv.serve([
+        RagRequest(q=q[0], trace=traces[0], deadline_s=1e-9),
+        RagRequest(q=q[1], trace=traces[1], deadline_s=1e6)])
+    for r in resp:
+        assert r.latency_s == pytest.approx(r.queue_s + r.service_s)
+        bd = r.breakdown()
+        assert bd["queue"] == pytest.approx(r.queue_s)
+        assert bd.get("generate", 0) > 0 and bd.get("retrieve", 0) > 0
+    assert resp[0].deadline_missed and not resp[1].deadline_missed
+
+
+def test_failed_drain_returns_undispatched_work_to_inbox(
+        small_store, small_index, rng):
+    """A drain that dies before dispatch (every replica dead) must not
+    swallow the submitted requests: after recovery a retry serves them."""
+    q = unit_queries(small_store, rng, 3)
+    traces = make_traces("hyde", 3, seed=23)
+    srv = TeleRAGServer(small_index, _cfg(), 1, get_arch("llama3-8b"))
+    srv.mark_dead(0)
+    for i in range(3):
+        srv.submit(RagRequest(q=q[i], trace=traces[i]))
+    with pytest.raises(RuntimeError, match="no healthy replicas"):
+        srv.drain()
+    srv.mark_alive(0)
+    resp = srv.drain()
+    assert [r.request_id for r in resp] == [t.request_id for t in traces]
+    assert all(r.state == RequestState.COMPLETE for r in resp)
+
+
+def test_pipeline_name_synthesizes_trace(small_store, small_index, rng):
+    q = unit_queries(small_store, rng, 2)
+    srv = TeleRAGServer(small_index, _cfg(), 1, get_arch("llama3-8b"))
+    resp = srv.serve([RagRequest(q=q[i], pipeline="hyde")
+                      for i in range(2)])
+    assert all(r.pipeline == "hyde" and len(r.rounds) == 1 for r in resp)
+    with pytest.raises(ValueError):
+        RagRequest(q=q[0])

@@ -109,6 +109,39 @@ def test_engine_snapshot_restore_roundtrip(small_store, small_index, rng,
     assert all(len(r.doc_ids) > 0 for r in res)
 
 
+def test_restore_rebinds_subscribers_and_keeps_admission_stats(
+        small_store, small_index, rng, engine):
+    """Replica restart must (a) carry page-free listeners onto the
+    replacement pool through the public rebind API — long-lived runtimes
+    keep waking on pressure events — and (b) restore admission telemetry
+    instead of silently zeroing it."""
+    ex = PipelineExecutor(engine)
+    q = unit_queries(small_store, rng, 2)
+    engine.cfg.cache_enabled = True
+    ex.execute_batch(q, make_traces("iter", 2, seed=6))
+    freed = []
+    engine.pool.subscribe(freed.append)
+    snap = engine.snapshot()
+    assert snap["admission"]["admitted"] > 0
+    stats_before = engine.admission.stats
+
+    engine.restore(snap)
+    assert engine.admission.stats == stats_before
+    # the pre-restore listener still hears the REPLACEMENT pool
+    lease = engine.pool.lease_slots(2)
+    engine.pool.release(lease)
+    assert freed and freed[-1] == 2
+    # restoring into a fresh replica carries the stats too; snapshots
+    # from before the admission key keep the fresh zeros (back-compat)
+    eng2 = TeleRAGEngine(small_index, engine.cfg, get_arch("llama3-8b"))
+    eng2.restore(snap)
+    assert eng2.admission.stats == stats_before
+    del snap["admission"]
+    eng3 = TeleRAGEngine(small_index, engine.cfg, get_arch("llama3-8b"))
+    eng3.restore(snap)
+    assert eng3.admission.stats.admitted == 0
+
+
 def test_orchestrator_with_dead_replica(small_store, small_index, rng):
     cfg = EngineConfig(nprobe=12, top_k=3, buffer_pages=128,
                        lookahead_rank=24, kernel_mode="ref",
