@@ -21,12 +21,12 @@ def main() -> None:
     if args.smoke:
         args.quick = True
         if args.only is None:
-            args.only = "overlap,sched,admission,openloop"
+            args.only = "overlap,sched,admission,openloop,tenants"
 
     from benchmarks import (bench_breakdown, bench_budget, bench_hitrate,
                             bench_kernels, bench_latency, bench_nprobe,
                             bench_openloop, bench_overlap, bench_sched,
-                            bench_scaling, bench_throughput)
+                            bench_scaling, bench_tenants, bench_throughput)
 
     benches = {
         "overlap": lambda: bench_overlap.run(64 if args.quick else 256),
@@ -50,6 +50,9 @@ def main() -> None:
             P=512 if args.quick else 2048),
         "openloop": lambda: bench_openloop.run(
             n_requests=16 if args.quick else 48),
+        "tenants": lambda: bench_tenants.run(
+            n_latency=4 if args.quick else 8,
+            n_batch=10 if args.quick else 24),
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

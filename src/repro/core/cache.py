@@ -14,7 +14,7 @@ serving each batch" reproducibility rule.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Sequence, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -93,13 +93,20 @@ class ClusterCache:
             self.hotness.pop(c, None)
         return evict
 
-    def make_room(self, buffer: PrefetchBuffer, pages_needed: int) -> List[int]:
+    def make_room(self, buffer: PrefetchBuffer, pages_needed: int, *,
+                  protect: Optional[Set[int]] = None) -> List[int]:
         """Evict coldest *unpinned* clusters until >= pages_needed slots
         are free (clusters pinned by an in-flight wave are untouchable —
-        this is the admission controller's spill hook)."""
+        this is the admission controller's spill hook).  ``protect``
+        additionally shields named clusters: the controller passes
+        enough of each other tenant's residency to keep it at its
+        guaranteed floor, so one tenant's spill can never dig another
+        below its reservation."""
         if buffer.free_pages() >= pages_needed:
             return []
         pinned = buffer.pinned_clusters()
+        if protect:
+            pinned = pinned | {int(c) for c in protect}
         order = sorted((c for c in buffer.resident if c not in pinned),
                        key=lambda c: self.hotness.get(c, 0.0))
         evicted: List[int] = []

@@ -1,4 +1,4 @@
-"""TeleRAG's two schedulers (paper §4.2, Fig. 7).
+"""TeleRAG's two schedulers (paper §4.2, Fig. 7), plus the SLO layer.
 
 Prefetching scheduler: greedily groups semantically similar queries into
 micro-batches (lowest pairwise L2 distance) so grouped queries share
@@ -10,6 +10,15 @@ Cache-aware scheduler: assigns micro-batches to replicas ("GPUs") by
 greatest overlap between the batch's predicted clusters and each
 replica's resident cache, highest-overlap-first, with a load cap so
 work stays balanced (and a deadline hook for straggler re-queue).
+Routing additionally reads per-replica ledger occupancy and — for
+multi-tenant serving — per-tenant pool occupancy, spreading a tenant's
+batches away from replicas it already loads.
+
+Dispatch policy: once micro-batches are queued on a replica, a
+``DispatchPolicy`` orders them.  ``EdfDispatch`` (the default) runs
+priority classes first and earliest-deadline-first inside a class; with
+no deadlines set it degrades exactly to the legacy (priority, FIFO)
+tie-break, which is what keeps the deprecated shims pinned equivalent.
 """
 
 from __future__ import annotations
@@ -83,7 +92,8 @@ def assign_to_replicas(batch_clusters: Sequence[Set[int]],
                        replica_caches: Sequence[Set[int]], *,
                        max_per_replica: Optional[int] = None,
                        occupancy: Optional[Sequence[float]] = None,
-                       ) -> List[Assignment]:
+                       tenant_occupancy: Optional[Sequence[Sequence[float]]]
+                       = None) -> List[Assignment]:
     """Greedy max-overlap assignment (paper: pick the (batch, GPU) pair with
     the greatest cached-cluster overlap, repeat in descending order).
 
@@ -91,6 +101,16 @@ def assign_to_replicas(batch_clusters: Sequence[Set[int]],
     ledger, in [0, 1]) breaks overlap ties toward the replica with the
     most free device memory; it is scaled well below one overlap unit so
     it can never override a real cached-cluster advantage.
+
+    ``tenant_occupancy`` ([n_batches][n_replicas] fractions in [0, 1]:
+    how much of replica r's pool batch i's *tenant* already holds)
+    nudges routing away from replicas the tenant is piling onto.  Both
+    soft terms combine linearly: neither can override a real
+    cached-cluster advantage, and a tenant-spread difference outweighs
+    a ledger-occupancy difference only when the latter is under ~0.2
+    (the 2e-4 / 1e-3 weight ratio) — spreading a tenant off an
+    otherwise-balanced replica is intended; overriding a clearly
+    memory-loaded one is not.
 
     The greedy sweep masks incrementally — one O(n_b·n_r) score matrix
     for the whole assignment instead of a fresh deep copy + full re-mask
@@ -106,10 +126,13 @@ def assign_to_replicas(batch_clusters: Sequence[Set[int]],
             overlap[i, r] = len(bc & rc)
     occ = (np.zeros(n_r) if occupancy is None
            else np.clip(np.asarray(occupancy, np.float64), 0.0, 1.0))
+    tocc = (np.zeros((n_b, n_r)) if tenant_occupancy is None
+            else np.clip(np.asarray(tenant_occupancy, np.float64), 0.0, 1.0))
     load = np.zeros(n_r, np.int64)
     taken = np.zeros(n_b, bool)
     out: List[Assignment] = []
-    masked = overlap.astype(np.float64) - 1e-3 * occ[None, :]
+    masked = (overlap.astype(np.float64) - 1e-3 * occ[None, :]
+              - 2e-4 * tocc)
     for _ in range(n_b):
         i, r = np.unravel_index(np.argmax(masked), masked.shape)
         if np.isneginf(masked[i, r]):    # everything capped — spill
@@ -146,13 +169,19 @@ class SchedulerPolicy:
     needs_cluster_hints: bool = False
 
     def group(self, q_in: np.ndarray, micro_batch: int) -> List[List[int]]:
+        """Partition queries (rows of ``q_in``) into micro-batches of at
+        most ``micro_batch``; returns lists of row indices."""
         raise NotImplementedError
 
     def assign(self, batch_clusters: Sequence[Set[int]],
                replica_caches: Sequence[Set[int]], *,
                max_per_replica: Optional[int] = None,
                occupancy: Optional[Sequence[float]] = None,
+               tenant_occupancy: Optional[Sequence[Sequence[float]]] = None,
                ) -> List[Assignment]:
+        """Route each micro-batch (predicted cluster set) to a replica,
+        reading live replica caches, ledger occupancy fractions, and —
+        for multi-tenant pools — per-tenant occupancy fractions."""
         raise NotImplementedError
 
 
@@ -176,16 +205,21 @@ class TeleRAGScheduler(SchedulerPolicy):
         return self.cache_aware
 
     def group(self, q_in: np.ndarray, micro_batch: int) -> List[List[int]]:
+        """Similarity grouping (or FIFO when the flag is off)."""
         if self.similarity_grouping:
             return group_queries(q_in, micro_batch)
         return _fifo_groups(q_in.shape[0], micro_batch)
 
     def assign(self, batch_clusters, replica_caches, *,
-               max_per_replica=None, occupancy=None) -> List[Assignment]:
+               max_per_replica=None, occupancy=None,
+               tenant_occupancy=None) -> List[Assignment]:
+        """Cache-aware greedy routing (or round-robin when the flag is
+        off); see ``assign_to_replicas`` for the tie-break ordering."""
         if self.cache_aware:
             return assign_to_replicas(batch_clusters, replica_caches,
                                       max_per_replica=max_per_replica,
-                                      occupancy=occupancy)
+                                      occupancy=occupancy,
+                                      tenant_occupancy=tenant_occupancy)
         n_r = len(replica_caches)
         return [Assignment(replica=i % n_r, batch_index=i, overlap=0)
                 for i in range(len(batch_clusters))]
@@ -198,6 +232,54 @@ class RoundRobinScheduler(TeleRAGScheduler):
 
     def __init__(self):
         super().__init__(similarity_grouping=False, cache_aware=False)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch policy: ordering queued micro-batches within a replica
+# ---------------------------------------------------------------------------
+
+
+class DispatchPolicy:
+    """Orders a replica's *queued* micro-batches: when the replica
+    runtime drains, the server dispatches the batch with the smallest
+    ``key``.  Keys are compared lexicographically; ``deadline_t`` is an
+    absolute event-clock deadline in seconds (``inf`` = no SLO) and
+    ``order`` is the batch's global enqueue sequence (the FIFO anchor
+    that makes every policy total and deterministic)."""
+
+    name: str = "base"
+
+    def key(self, *, priority: int, deadline_t: float, order: int,
+            now: float) -> Tuple:
+        """Sort key for one queued batch at clock time ``now``
+        (seconds); the smallest key dispatches first."""
+        raise NotImplementedError
+
+
+class FifoDispatch(DispatchPolicy):
+    """Strict arrival order — ignores priorities and deadlines (the
+    SLO-blind baseline ``bench_tenants.py`` compares against)."""
+
+    name = "fifo"
+
+    def key(self, *, priority: int, deadline_t: float, order: int,
+            now: float) -> Tuple:
+        """(order,): pure FIFO."""
+        return (order,)
+
+
+class EdfDispatch(DispatchPolicy):
+    """Priority classes first, earliest-deadline-first within a class,
+    FIFO among equals.  With no deadlines set (every ``deadline_t`` is
+    ``inf``) this is exactly the legacy (priority, order) tie-break, so
+    single-tenant callers see unchanged dispatch order."""
+
+    name = "edf"
+
+    def key(self, *, priority: int, deadline_t: float, order: int,
+            now: float) -> Tuple:
+        """(priority class, absolute deadline, enqueue order)."""
+        return (priority, deadline_t, order)
 
 
 # ---------------------------------------------------------------------------

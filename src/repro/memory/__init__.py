@@ -1,21 +1,26 @@
 """Unified paged device-memory subsystem: one HBM arbiter per replica.
 
 ``DevicePagePool`` (slab allocator: leases, refcounts, reservations,
-block tables) + ``MemoryLedger`` (byte-accurate per-category accounting)
-+ ``AdmissionController`` (reserve/stall/spill decisions for waves).
-The prefetch buffer and the KV cache both draw from the same pool, so
-retrieval state and generation state finally compete for — and are
-accounted against — the same bytes.
+block tables, per-tenant floors/caps via ``TenantShare``) +
+``MemoryLedger`` (byte-accurate per-category and per-tenant accounting)
++ ``AdmissionController`` (tenant-scoped reserve/stall/spill decisions
+for waves).  The prefetch buffer and the KV cache both draw from the
+same pool, so retrieval state and generation state finally compete for
+— and are accounted against — the same bytes.
+
+See docs/TELEMETRY.md for the ledger-snapshot and admission-stats
+field reference.
 """
 
 from repro.memory.admission import (AdmissionController, AdmissionStats,
                                     AdmissionTicket)
 from repro.memory.ledger import MemoryLedger
 from repro.memory.pool import (DevicePagePool, PageLease, PoolExhausted,
-                               Reservation)
+                               Reservation, TenantShare)
 
 __all__ = [
     "AdmissionController", "AdmissionStats", "AdmissionTicket",
     "MemoryLedger",
     "DevicePagePool", "PageLease", "PoolExhausted", "Reservation",
+    "TenantShare",
 ]

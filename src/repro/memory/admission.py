@@ -21,20 +21,33 @@ makes the reserve/stall/spill decision explicit:
      ticket ``capped`` so telemetry shows the shortfall.  This is the
      progress guarantee: a stall with no possible waker would deadlock.
 
+Multi-tenant pools add two rules.  Admission is **tenant-scoped**: a
+ticket reserves against ``pool.reservable_pages_for(tenant)``, so one
+tenant's burst can never consume another tenant's unclaimed floor.  And
+the spill hook is handed a **protect set**: residency belonging to
+tenants at or under their guaranteed floor is never evicted to make
+room for someone else's burst — spill victims come only from over-floor
+(or untenanted) holders.
+
 The controller never moves bytes itself; it only arbitrates the pool.
 """
 
 from __future__ import annotations
 
+import inspect
 import itertools
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.memory.pool import DevicePagePool, Reservation
 
 
 @dataclass
 class AdmissionStats:
+    """Counters for one admission domain (a replica, or one tenant's
+    slice of it).  ``*_pages`` fields count whole page slots; the rest
+    count admit() decisions."""
+
     admitted: int = 0                # tickets granted with full headroom
     stalled: int = 0                 # admit() refusals that parked a wave
     resumed: int = 0                 # parked waves re-admitted later
@@ -46,7 +59,8 @@ class AdmissionStats:
 @dataclass(eq=False)
 class AdmissionTicket:
     """One granted admission: the wave may allocate up to its
-    reservation; ``commit()`` after dispatch returns the remainder."""
+    reservation (``pages_granted`` pages); ``commit()`` after dispatch
+    returns the remainder.  ``tenant`` is who the pages are charged to."""
 
     ticket_id: int
     owner: str
@@ -55,55 +69,131 @@ class AdmissionTicket:
     reservation: Optional[Reservation]
     capped: bool = False
     spilled_pages: int = 0
+    tenant: str = "shared"
 
 
 class AdmissionController:
+    """Arbitrates the pool for wave admission: reserve / spill / stall /
+    cap, with per-tenant floors honored and per-tenant stats kept next
+    to the replica-wide ``stats``."""
+
     def __init__(self, pool: DevicePagePool, *,
-                 spill: Optional[Callable[[int], None]] = None):
-        """``spill(target_free_pages)`` should try to raise the pool's
-        physically-free page count to the target by evicting cold,
-        unpinned residency (best effort)."""
+                 spill: Optional[Callable[..., object]] = None):
+        """``spill(target_free_pages, protect=None)`` should try to raise
+        the pool's physically-free page count to the target by evicting
+        cold, unpinned residency (best effort), skipping any cluster in
+        ``protect`` (residency of tenants at/under their floor).  Hooks
+        with the legacy single-argument signature are still accepted."""
         self.pool = pool
         self.spill = spill
+        self._spill_takes_protect = False
+        if spill is not None:
+            try:
+                params = inspect.signature(spill).parameters
+                self._spill_takes_protect = (
+                    "protect" in params
+                    or any(p.kind is p.VAR_KEYWORD
+                           for p in params.values()))
+            except (TypeError, ValueError):
+                pass
         self.stats = AdmissionStats()
+        self.per_tenant: Dict[str, AdmissionStats] = {}
         self._ids = itertools.count()
-        self.parked: List[Tuple[object, int]] = []   # (key, pages_requested)
+        # parked waves: (key, pages_requested, tenant)
+        self.parked: List[Tuple[object, int, str]] = []
+
+    def _tstats(self, tenant: str) -> AdmissionStats:
+        """The per-tenant stats slice (created on first touch)."""
+        if tenant not in self.per_tenant:
+            self.per_tenant[tenant] = AdmissionStats()
+        return self.per_tenant[tenant]
 
     # -- decision -----------------------------------------------------------
-    def admit(self, npages: int, owner: str, *,
-              can_wait: bool = True) -> Optional[AdmissionTicket]:
-        """Reserve ``npages`` of headroom.  None = park and retry on a
-        page-free event (only when ``can_wait`` and a future free is
-        possible); otherwise the grant may be spilled-into or capped."""
+    def admit(self, npages: int, owner: str, *, can_wait: bool = True,
+              tenant: str = "shared") -> Optional[AdmissionTicket]:
+        """Reserve ``npages`` of headroom for ``tenant``.  None = park
+        and retry on a page-free event (only when ``can_wait`` and a
+        future free is possible); otherwise the grant may be
+        spilled-into or capped."""
         npages = int(npages)
-        res = self.pool.reserve(npages, owner)
+        tstats = self._tstats(tenant)
+        res = self.pool.reserve(npages, owner, tenant=tenant)
         spilled = 0
         if res is None and self.spill is not None and npages > 0:
             before = self.pool.free_pages()
             # target enough physical frees to cover others' reservations too
-            self.spill(npages + self.pool.reserved_pages())
+            self._run_spill(npages + self.pool.reserved_pages(), tenant)
             spilled = self.pool.free_pages() - before
             self.stats.spilled_pages += spilled
-            res = self.pool.reserve(npages, owner)
+            tstats.spilled_pages += spilled
+            res = self.pool.reserve(npages, owner, tenant=tenant)
         if res is None:
-            if can_wait and self.holds_pending_release():
+            # parking is only sound if a future free could EVER satisfy
+            # the request — a plan above the tenant's reachable ceiling
+            # (its burst cap / others' floors) must cap now, not starve
+            # on page-free retries until the event heap drains
+            reachable = npages <= self.pool.tenant_ceiling(tenant)
+            if can_wait and reachable and self.holds_pending_release():
                 self.stats.stalled += 1
+                tstats.stalled += 1
                 return None
-            granted = max(0, self.pool.reservable_pages())
-            res = self.pool.reserve(granted, owner) if granted else None
+            granted = max(0, self.pool.reservable_pages_for(tenant))
+            res = (self.pool.reserve(granted, owner, tenant=tenant)
+                   if granted else None)
             self.stats.capped += 1
+            tstats.capped += 1
             self.stats.shortfall_pages += npages - granted
+            tstats.shortfall_pages += npages - granted
             return AdmissionTicket(
                 ticket_id=next(self._ids), owner=owner,
                 pages_requested=npages, pages_granted=granted,
-                reservation=res, capped=True, spilled_pages=spilled)
+                reservation=res, capped=True, spilled_pages=spilled,
+                tenant=tenant)
         self.stats.admitted += 1
+        tstats.admitted += 1
         return AdmissionTicket(
             ticket_id=next(self._ids), owner=owner, pages_requested=npages,
-            pages_granted=npages, reservation=res, spilled_pages=spilled)
+            pages_granted=npages, reservation=res, spilled_pages=spilled,
+            tenant=tenant)
+
+    def _run_spill(self, target: int, tenant: str) -> None:
+        """Invoke the spill hook with the floor-protect set (falling
+        back to the legacy one-argument hook signature, detected once
+        at construction)."""
+        if self._spill_takes_protect:
+            self.spill(target, protect=self.spill_protect(tenant))
+        else:
+            self.spill(target)
+
+    def spill_protect(self, tenant: str) -> Optional[Set[object]]:
+        """Cluster tags whose residency spill must NOT evict on behalf
+        of ``tenant``: for every OTHER tenant with a guaranteed floor,
+        enough of its prefetch residency (whole clusters, in lease
+        order) to keep its held pages at or above the floor.  A tenant
+        under its floor is protected entirely; one over its floor
+        exposes only the excess as spill victims — so an eviction can
+        never dig a tenant below its reservation, and everything it
+        frees is genuinely usable by the requester (pages below the
+        victim's floor would be withheld from the requester anyway).
+        None when the pool has no tenant shares (legacy behaviour)."""
+        if not self.pool.tenant_shares:
+            return None
+        protect: Set[object] = set()
+        for t, share in self.pool.tenant_shares.items():
+            if t == tenant or share.floor_pages <= 0:
+                continue
+            kept = 0
+            for lease in self.pool.leases.values():
+                if lease.owner != "prefetch" or lease.tenant != t:
+                    continue
+                if kept >= share.floor_pages:
+                    break
+                protect.add(lease.tag)
+                kept += lease.num_pages
+        return protect or None
 
     def commit(self, ticket: AdmissionTicket) -> int:
-        """Return the ticket's unconsumed headroom after dispatch."""
+        """Return the ticket's unconsumed headroom (pages) after dispatch."""
         if ticket.reservation is None:
             return 0
         return self.pool.cancel(ticket.reservation)
@@ -118,12 +208,17 @@ class AdmissionController:
                    for l in self.pool.leases.values())
 
     # -- parking (waves waiting on page-free events) ------------------------
-    def park(self, key: object, npages: int) -> None:
-        self.parked.append((key, int(npages)))
+    def park(self, key: object, npages: int,
+             tenant: str = "shared") -> None:
+        """Record a stalled wave (``key``) waiting for ``npages`` to
+        become free; ``tenant`` keeps the resume stats attributable."""
+        self.parked.append((key, int(npages), tenant))
 
     def unpark_all(self) -> List[Tuple[object, int]]:
         """Hand every parked wave back to the caller for a retry (the
         retry re-enters ``admit``, so order and fairness live there)."""
         out, self.parked = self.parked, []
         self.stats.resumed += len(out)
-        return out
+        for _key, _npages, tenant in out:
+            self._tstats(tenant).resumed += 1
+        return [(key, npages) for key, npages, _tenant in out]

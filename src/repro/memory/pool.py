@@ -24,6 +24,13 @@ before any page is touched: ``reserve()`` subtracts from
 ``reservable_pages()`` without moving slots; allocation under the
 reservation consumes it; ``cancel()`` returns the unused remainder.
 
+**Tenant shares** make the pool multi-tenant: each lease/reservation is
+tagged with the tenant it serves, and ``set_tenant_share`` registers a
+guaranteed page *floor* (held back from every other tenant while
+unclaimed) plus an optional *burst cap* (``max_pages``).  With no
+shares registered every tenant sees the legacy single-tenant pool —
+``reservable_pages_for`` degrades to ``reservable_pages`` exactly.
+
 Every alloc/free is mirrored into the replica's ``MemoryLedger`` (exact
 bytes, not page-rounded, when the caller knows them) and broadcast to
 ``subscribe``d listeners — the runtime turns those callbacks into
@@ -76,9 +83,11 @@ class PageLease:
     nbytes: int                      # exact bytes charged to the ledger
     tag: object = None               # caller-meaningful id (cluster, request)
     refcount: int = 1
+    tenant: str = "shared"           # tenant the pages are attributed to
 
     @property
     def num_pages(self) -> int:
+        """Pages held by this lease (length of its block table)."""
         return len(self.slots)
 
 
@@ -89,14 +98,41 @@ class Reservation:
     res_id: int
     owner: str
     pages: int                       # remaining unconsumed headroom
+    tenant: str = "shared"           # tenant the headroom is charged to
 
     def __repr__(self) -> str:       # short form for event logs
-        return f"Reservation({self.res_id}, {self.owner!r}, pages={self.pages})"
+        return (f"Reservation({self.res_id}, {self.owner!r}, "
+                f"pages={self.pages}, tenant={self.tenant!r})")
+
+
+@dataclass(frozen=True)
+class TenantShare:
+    """One tenant's pool entitlement (pages, not bytes).
+
+    ``floor_pages`` is a guaranteed reservation floor: while the tenant
+    holds fewer pages than its floor, the shortfall is withheld from
+    every other tenant's reservable headroom, so the floor can always
+    be claimed.  ``max_pages`` is the burstable cap — the most the
+    tenant may hold in total (``None`` = may burst to the whole pool).
+    """
+
+    tenant: str
+    floor_pages: int
+    max_pages: Optional[int] = None
 
 
 class DevicePagePool:
+    """One replica's HBM slab allocator: ``num_pages`` fixed-size page
+    slots handed out as refcounted leases (block tables), with
+    admission reservations and per-tenant floors/caps layered on the
+    same free list.  All byte quantities are exact bytes; all counts
+    returned by ``*_pages`` methods are whole page slots."""
+
     def __init__(self, paged: PagedClusters, num_pages: int,
                  dtype=jnp.bfloat16, *, ledger: Optional[MemoryLedger] = None):
+        """Build a pool of ``num_pages`` device page slots over ``paged``
+        (which fixes the page geometry and therefore ``page_nbytes``);
+        ``ledger`` defaults to a fresh byte ledger sized to the slab."""
         self.paged = paged
         self.num_pages = num_pages
         self.dtype = dtype
@@ -109,16 +145,28 @@ class DevicePagePool:
             capacity_bytes=num_pages * self.page_nbytes)
         self.leases: Dict[int, PageLease] = {}
         self.reservations: Dict[int, Reservation] = {}
+        self.tenant_shares: Dict[str, TenantShare] = {}
+        # running per-tenant held-page counters (leases + unconsumed
+        # reservations), maintained incrementally so reserve/lease stay
+        # O(1) instead of scanning every lease per allocation
+        self._tenant_held: Dict[str, int] = {}
         self._ids = itertools.count()
         self._subscribers: List[Callable[[int], None]] = []
+
+    def _bump_tenant(self, tenant: str, delta: int) -> None:
+        if delta:
+            self._tenant_held[tenant] = (self._tenant_held.get(tenant, 0)
+                                         + delta)
 
     # -- capacity -----------------------------------------------------------
     @property
     def page_nbytes(self) -> int:
+        """Bytes per page slot (fixed by the paged datastore geometry)."""
         return self.paged.page_nbytes()
 
     @property
     def capacity_bytes(self) -> int:
+        """Total slab bytes (``num_pages * page_nbytes``)."""
         return self.num_pages * self.page_nbytes
 
     def free_pages(self) -> int:
@@ -127,9 +175,11 @@ class DevicePagePool:
 
     @property
     def used_pages(self) -> int:
+        """Slots currently out on leases (pages, not bytes)."""
         return self.num_pages - len(self.free)
 
     def reserved_pages(self) -> int:
+        """Unconsumed headroom promised to outstanding reservations."""
         return sum(r.pages for r in self.reservations.values())
 
     def reservable_pages(self) -> int:
@@ -137,8 +187,70 @@ class DevicePagePool:
         return len(self.free) - self.reserved_pages()
 
     def leased_pages(self, owner: Optional[str] = None) -> int:
+        """Pages out on leases, optionally filtered by ledger category."""
         return sum(l.num_pages for l in self.leases.values()
                    if owner is None or l.owner == owner)
+
+    # -- tenant shares ------------------------------------------------------
+    def set_tenant_share(self, tenant: str, floor_pages: int,
+                         max_pages: Optional[int] = None) -> TenantShare:
+        """Register (or replace) ``tenant``'s entitlement: a guaranteed
+        ``floor_pages`` reservation floor plus an optional ``max_pages``
+        burst cap.  The sum of floors must fit the pool."""
+        share = TenantShare(tenant=tenant, floor_pages=int(floor_pages),
+                            max_pages=(None if max_pages is None
+                                       else int(max_pages)))
+        if share.max_pages is not None and share.max_pages < share.floor_pages:
+            raise ValueError(f"max_pages {share.max_pages} < floor "
+                             f"{share.floor_pages} for tenant {tenant!r}")
+        others = sum(s.floor_pages for t, s in self.tenant_shares.items()
+                     if t != tenant)
+        if others + share.floor_pages > self.num_pages:
+            raise ValueError(
+                f"tenant floors exceed the pool: {others} + "
+                f"{share.floor_pages} > {self.num_pages} pages")
+        self.tenant_shares[tenant] = share
+        return share
+
+    def tenant_pages(self, tenant: str) -> int:
+        """Pages ``tenant`` currently holds: its live leases plus its
+        outstanding (unconsumed) reservation headroom.  O(1) — read off
+        the incrementally-maintained counter."""
+        return self._tenant_held.get(tenant, 0)
+
+    def withheld_floor_pages(self, tenant: str) -> int:
+        """Pages held back from ``tenant``: the unclaimed part of every
+        OTHER tenant's guaranteed floor (``max(0, floor - held)``)."""
+        return sum(max(0, s.floor_pages - self.tenant_pages(t))
+                   for t, s in self.tenant_shares.items() if t != tenant)
+
+    def tenant_ceiling(self, tenant: str = "shared") -> int:
+        """The most pages ``tenant`` could EVER reserve in one request,
+        assuming every current holder releases: the pool minus other
+        tenants' guaranteed floors, bounded by the tenant's own burst
+        cap.  A request above this can never be granted — admission
+        must cap it rather than park it waiting for frees that cannot
+        suffice."""
+        ceiling = self.num_pages - sum(
+            s.floor_pages for t, s in self.tenant_shares.items()
+            if t != tenant)
+        share = self.tenant_shares.get(tenant)
+        if share is not None and share.max_pages is not None:
+            ceiling = min(ceiling, share.max_pages)
+        return max(0, ceiling)
+
+    def reservable_pages_for(self, tenant: str = "shared") -> int:
+        """``reservable_pages`` as seen by ``tenant``: free slots minus
+        outstanding reservations, minus other tenants' unclaimed floors,
+        capped by the tenant's own burst cap.  With no shares registered
+        this is exactly ``reservable_pages()``."""
+        if not self.tenant_shares:
+            return self.reservable_pages()
+        avail = self.reservable_pages() - self.withheld_floor_pages(tenant)
+        share = self.tenant_shares.get(tenant)
+        if share is not None and share.max_pages is not None:
+            avail = min(avail, share.max_pages - self.tenant_pages(tenant))
+        return max(0, avail)
 
     def subscribe(self, cb: Callable[[int], None]) -> None:
         """``cb(pages_freed)`` fires whenever slots return to the free list."""
@@ -165,12 +277,18 @@ class DevicePagePool:
                 cb(pages)
 
     # -- reservations -------------------------------------------------------
-    def reserve(self, npages: int, owner: str) -> Optional[Reservation]:
-        if npages > self.reservable_pages():
+    def reserve(self, npages: int, owner: str,
+                tenant: str = "shared") -> Optional[Reservation]:
+        """Promise ``npages`` of headroom to ``owner`` on behalf of
+        ``tenant`` (None = the tenant's view of the pool cannot cover
+        it: free slots minus others' reservations and unclaimed floors,
+        bounded by the tenant's burst cap)."""
+        if npages > self.reservable_pages_for(tenant):
             return None
         res = Reservation(res_id=next(self._ids), owner=owner,
-                          pages=int(npages))
+                          pages=int(npages), tenant=tenant)
         self.reservations[res.res_id] = res
+        self._bump_tenant(tenant, int(npages))
         return res
 
     def cancel(self, res: Reservation) -> int:
@@ -179,50 +297,60 @@ class DevicePagePool:
         if live is None:
             return 0
         remainder, live.pages = live.pages, 0
+        self._bump_tenant(live.tenant, -remainder)
         self._notify_freed(remainder)
         return remainder
 
     # -- leases -------------------------------------------------------------
     def _take_slots(self, npages: int, reservation: Optional[Reservation],
-                    ) -> Optional[List[int]]:
+                    tenant: str) -> Optional[List[int]]:
         if reservation is not None and reservation.res_id in self.reservations:
-            headroom = self.reservable_pages() + reservation.pages
+            headroom = self.reservable_pages_for(tenant) + reservation.pages
         else:
             reservation = None
-            headroom = self.reservable_pages()
+            headroom = self.reservable_pages_for(tenant)
         if npages > headroom or npages > len(self.free):
             return None
         if reservation is not None:
-            reservation.pages = max(0, reservation.pages - npages)
+            consumed = min(reservation.pages, npages)
+            reservation.pages -= consumed
+            self._bump_tenant(reservation.tenant, -consumed)
         return [self.free.pop() for _ in range(npages)]
 
     def lease_slots(self, npages: int, owner: str = "prefetch", *,
                     tag: object = None, nbytes: Optional[int] = None,
                     reservation: Optional[Reservation] = None,
-                    ) -> Optional[PageLease]:
-        """Lease scatterable page slots (cluster pages). None = no room."""
-        slots = self._take_slots(npages, reservation)
+                    tenant: Optional[str] = None) -> Optional[PageLease]:
+        """Lease scatterable page slots (cluster pages). None = no room.
+        ``tenant`` defaults to the reservation's tenant (a wave's lease
+        inherits the tenancy its admission reserved under)."""
+        if tenant is None:
+            tenant = reservation.tenant if reservation is not None else "shared"
+        slots = self._take_slots(npages, reservation, tenant)
         if slots is None:
             return None
         nb = npages * self.page_nbytes if nbytes is None else int(nbytes)
         lease = PageLease(lease_id=next(self._ids), owner=owner,
-                         slots=tuple(slots), nbytes=nb, tag=tag)
+                         slots=tuple(slots), nbytes=nb, tag=tag,
+                         tenant=tenant)
         self.leases[lease.lease_id] = lease
-        self.ledger.charge(owner, nb)
+        self._bump_tenant(tenant, npages)
+        self.ledger.charge(owner, nb, tenant=tenant)
         return lease
 
     def lease_bytes(self, nbytes: int, owner: str = "kv", *,
                     tag: object = None,
                     reservation: Optional[Reservation] = None,
-                    ) -> Optional[PageLease]:
+                    tenant: Optional[str] = None) -> Optional[PageLease]:
         """Charge an HBM footprint that lives outside the slab (KV cache):
         whole page slots leave circulation, the ledger is charged the
         exact byte count."""
         npages = -(-int(nbytes) // self.page_nbytes)
         return self.lease_slots(npages, owner, tag=tag, nbytes=int(nbytes),
-                                reservation=reservation)
+                                reservation=reservation, tenant=tenant)
 
     def retain(self, lease: PageLease) -> PageLease:
+        """Take one more reference on a live lease (wave pinning)."""
         if lease.lease_id not in self.leases:
             raise KeyError(f"lease {lease.lease_id} is not live")
         lease.refcount += 1
@@ -238,7 +366,8 @@ class DevicePagePool:
             return 0
         del self.leases[lease.lease_id]
         self.free.extend(lease.slots)
-        self.ledger.credit(lease.owner, lease.nbytes)
+        self._bump_tenant(lease.tenant, -lease.num_pages)
+        self.ledger.credit(lease.owner, lease.nbytes, tenant=lease.tenant)
         self._notify_freed(lease.num_pages)
         return lease.num_pages
 
@@ -267,4 +396,6 @@ class DevicePagePool:
             jnp.asarray(ids_arr), jnp.asarray(cl_arr))
 
     def device_view(self):
+        """The (pages, page_ids, page_cluster) device arrays the search
+        kernels read (page_cluster -1 marks unsearchable slots)."""
         return self.pages, self.page_ids, self.page_cluster

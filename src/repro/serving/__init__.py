@@ -1,5 +1,6 @@
 from repro.serving.api import (RagRequest, RagResponse, ReplicaTelemetry,
-                               ServerTelemetry, TeleRAGServer, WaveDispatch,
+                               ServerTelemetry, TeleRAGServer,
+                               TenantTelemetry, WaveDispatch,
                                summarize_latency)
 from repro.serving.engine import (EngineConfig, RequestResult, RoundTelemetry,
                                   TeleRAGEngine)
@@ -18,7 +19,7 @@ from repro.serving.trace import (PIPELINES, RequestTrace, StageTrace,
 
 __all__ = [
     "RagRequest", "RagResponse", "ReplicaTelemetry", "ServerTelemetry",
-    "TeleRAGServer", "WaveDispatch", "summarize_latency",
+    "TeleRAGServer", "TenantTelemetry", "WaveDispatch", "summarize_latency",
     "EngineConfig", "RequestResult", "RoundTelemetry", "TeleRAGEngine",
     "CacheLease", "KVCacheManager",
     "GlobalBatchReport", "MultiReplicaOrchestrator", "PipelineExecutor",

@@ -32,21 +32,32 @@ replica are the ROADMAP follow-up this API is shaped for.
 ``ServerTelemetry`` unifies what previously lived in four places —
 ``buffer.stats``, ``cache.hit_rate``, ``ledger.snapshot()``,
 ``admission.stats``, and the transfer-engine event list — into one
-snapshot the serve drivers and smoke benches print.
+snapshot the serve drivers and smoke benches print, plus per-tenant
+SLO attainment (see docs/TELEMETRY.md for the field reference).
+
+Tenancy and SLOs are first-class: ``RagRequest.tenant`` makes waves
+tenant-pure and admission tenant-scoped (per-tenant pool floors/caps
+via ``EngineConfig.tenant_shares``), the default ``EdfDispatch`` orders
+queued micro-batches by priority class then earliest deadline, and
+responses split a deadline miss into missed-in-queue vs
+missed-in-service (docs/ARCHITECTURE.md, "multi-tenant SLO-aware
+serving").
 """
 
 from __future__ import annotations
 
 import itertools
 import time
-from dataclasses import dataclass, replace as dc_replace
+from dataclasses import (dataclass, field as dataclasses_field,
+                         replace as dc_replace)
 from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple)
 
 import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.ivf import IVFIndex, probe
-from repro.core.schedulers import Assignment, SchedulerPolicy
+from repro.core.schedulers import (Assignment, DispatchPolicy, EdfDispatch,
+                                   SchedulerPolicy)
 from repro.memory.admission import AdmissionStats
 from repro.serving.engine import (EngineConfig, RoundTelemetry,
                                   TeleRAGEngine)
@@ -67,9 +78,17 @@ class RagRequest:
     ``pipeline`` names one of the six §5.1 pipelines (the server
     synthesizes a seeded trace); an explicit ``trace`` wins when given.
     ``arrival_t`` is seconds after the drain epoch starts (open-loop
-    offered load); ``priority`` breaks dispatch ties in a replica's
-    queue (lower first); ``deadline_s`` is an arrival→complete SLO bound
-    stamped onto the response as ``deadline_missed``.
+    offered load).  ``tenant`` names who the request belongs to: waves
+    are grouped tenant-pure, pool admission reserves against the
+    tenant's floor/cap (``EngineConfig.tenant_shares``), and SLO
+    attainment is reported per tenant.  The default ``"shared"`` is the
+    untenanted sentinel used across the whole stack (no per-tenant
+    ledger bytes are tracked for it).  ``priority`` is the dispatch
+    priority *class* (lower dispatches first); ``deadline_s`` is an
+    arrival→complete SLO bound in seconds — the default ``EdfDispatch``
+    orders queued batches earliest-deadline-first within a priority
+    class, and the response reports ``deadline_missed`` (split into
+    missed-in-queue vs missed-in-service).
     """
 
     q: np.ndarray
@@ -78,6 +97,7 @@ class RagRequest:
     arrival_t: float = 0.0
     priority: int = 0
     deadline_s: Optional[float] = None
+    tenant: str = "shared"
 
     def __post_init__(self):
         if self.trace is None and self.pipeline is None:
@@ -86,7 +106,15 @@ class RagRequest:
 
 @dataclass(frozen=True)
 class RagResponse:
-    """One completed request: results + its event-clock life story."""
+    """One completed request: results + its event-clock life story.
+
+    All timestamps are seconds on the shared global event clock.  The
+    deadline flags split an SLO miss by *where* the time was lost:
+    ``deadline_missed_in_queue`` means the deadline had already passed
+    while the request was still waiting for a replica slot (before
+    ``admit_t``) — so no amount of faster service could have saved it —
+    while ``deadline_missed`` alone means service itself ran long.
+    """
 
     request_id: int
     pipeline: str
@@ -99,21 +127,34 @@ class RagResponse:
     admit_t: float                   # dispatch onto the replica runtime
     complete_t: float
     deadline_missed: bool = False
+    deadline_missed_in_queue: bool = False
+    tenant: str = "shared"
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    demoted_rounds: int = 0          # rounds whose prefetch was demoted
 
     @property
     def queue_s(self) -> float:
-        """Time spent waiting for a replica slot (arrival → admit)."""
+        """Time spent waiting for a replica slot (arrival → admit, s)."""
         return self.admit_t - self.arrival_t
 
     @property
     def service_s(self) -> float:
-        """Admit → complete on the replica's event clock."""
+        """Admit → complete on the replica's event clock (seconds)."""
         return self.complete_t - self.admit_t
 
     @property
     def latency_s(self) -> float:
-        """End-to-end arrival → complete (what open-loop load inflates)."""
+        """End-to-end arrival → complete in seconds (what open-loop
+        load inflates)."""
         return self.complete_t - self.arrival_t
+
+    @property
+    def stall_s(self) -> float:
+        """Seconds parked ``PRESSURE_STALLED`` on pool admission (the
+        part of service lost to memory pressure, summed over rounds)."""
+        return sum(s.end - s.start for s in self.timeline
+                   if s.kind == "pressure_stall")
 
     def breakdown(self) -> Dict[str, float]:
         """Seconds per lifecycle stage: queue wait plus the summed span
@@ -159,6 +200,8 @@ class ReplicaTelemetry:
 
     @classmethod
     def capture(cls, i: int, eng: TeleRAGEngine) -> "ReplicaTelemetry":
+        """Snapshot replica ``i``'s engine counters (admission stats are
+        copied, so the snapshot does not alias live state)."""
         return cls(
             replica=i,
             bytes_h2d=eng.buffer.stats.bytes_h2d,
@@ -173,38 +216,109 @@ class ReplicaTelemetry:
 
 
 @dataclass(frozen=True)
+class TenantTelemetry:
+    """One tenant's SLO attainment, accumulated over every completed
+    response.  Latency percentiles are arrival→complete seconds on the
+    event clock; ``stall_s`` is the summed ``PRESSURE_STALLED`` time
+    attributable to pool admission; the miss counters match the
+    per-response ``deadline_missed`` / ``deadline_missed_in_queue``
+    flags exactly (pinned in tests/test_slo.py)."""
+
+    tenant: str
+    completed: int
+    p50_latency_s: float
+    p99_latency_s: float
+    mean_queue_s: float
+    stall_s: float
+    with_deadline: int               # responses that carried an SLO bound
+    deadline_missed: int
+    missed_in_queue: int             # deadline passed before admit_t
+    demoted_rounds: int              # prefetches demoted as already-missed
+
+    @property
+    def missed_in_service(self) -> int:
+        """Misses where the request was admitted in time but service ran
+        past the deadline (``deadline_missed - missed_in_queue``)."""
+        return self.deadline_missed - self.missed_in_queue
+
+    @property
+    def attainment(self) -> float:
+        """Fraction of deadline-carrying responses that met their SLO
+        (1.0 when the tenant never set a deadline)."""
+        if not self.with_deadline:
+            return 1.0
+        return 1.0 - self.deadline_missed / self.with_deadline
+
+    def line(self) -> str:
+        """One printable summary line for this tenant."""
+        return (f"tenant {self.tenant}: {self.completed} done "
+                f"p50={self.p50_latency_s*1e3:.1f}ms "
+                f"p99={self.p99_latency_s*1e3:.1f}ms "
+                f"queue_mean={self.mean_queue_s*1e3:.1f}ms "
+                f"attain={self.attainment:.0%} "
+                f"miss={self.deadline_missed} "
+                f"(queue {self.missed_in_queue} / "
+                f"service {self.missed_in_service}) "
+                f"stall={self.stall_s*1e3:.1f}ms "
+                f"demoted={self.demoted_rounds}")
+
+
+@dataclass(frozen=True)
 class ServerTelemetry:
     """One unified snapshot of the whole serving surface (previously
     scattered across buffer.stats, cache.hit_rate, ledger.snapshot(),
-    admission.stats, and transfer events)."""
+    admission.stats, and transfer events), plus per-tenant SLO
+    attainment.  See docs/TELEMETRY.md for the field reference."""
 
     completed: int
     waves: int
     dispatched_batches: int
     clock_s: float
     replicas: Tuple[ReplicaTelemetry, ...]
+    tenants: Tuple[TenantTelemetry, ...] = ()
 
     @property
     def bytes_h2d(self) -> int:
+        """Lifetime H2D bytes summed across replicas."""
         return sum(r.bytes_h2d for r in self.replicas)
 
     @property
     def pages_h2d(self) -> int:
+        """Lifetime H2D pages summed across replicas."""
         return sum(r.pages_h2d for r in self.replicas)
 
     @property
     def admission_stalled(self) -> int:
+        """admit() refusals that parked a wave, summed across replicas."""
         return sum(r.admission.stalled for r in self.replicas)
 
     @property
     def admission_admitted(self) -> int:
+        """Full-headroom admission tickets, summed across replicas."""
         return sum(r.admission.admitted for r in self.replicas)
 
     @property
     def spilled_pages(self) -> int:
+        """Pages reclaimed by admission spill, summed across replicas."""
         return sum(r.admission.spilled_pages for r in self.replicas)
 
+    @property
+    def deadline_missed(self) -> int:
+        """Deadline misses summed across tenants (== the number of
+        completed responses whose ``deadline_missed`` flag is set)."""
+        return sum(t.deadline_missed for t in self.tenants)
+
+    def tenant(self, name: str) -> Optional["TenantTelemetry"]:
+        """The named tenant's slice, or None if it never completed a
+        request."""
+        for t in self.tenants:
+            if t.tenant == name:
+                return t
+        return None
+
     def summary(self) -> str:
+        """Multi-line printable snapshot: fleet totals, one line per
+        replica, one line per tenant."""
         lines = [
             f"server: {self.completed} completed / {self.waves} waves / "
             f"{self.dispatched_batches} micro-batches, "
@@ -224,6 +338,8 @@ class ServerTelemetry:
                 f"peak={led.get('peak', 0)/1e9:.2f}GB "
                 f"transfers={r.transfers} "
                 f"(queued {r.transfer_queued_s*1e3:.1f}ms)")
+        for t in self.tenants:
+            lines.append("  " + t.line())
         return "\n".join(lines)
 
 
@@ -259,6 +375,47 @@ class _QueuedBatch:
     priority: int
     order: int
     members: List[_Submitted]
+    deadline_t: float = float("inf")  # earliest member deadline (absolute)
+    tenant: str = "shared"
+
+
+@dataclass
+class _TenantAcc:
+    """Running per-tenant SLO accumulator (folded into TenantTelemetry
+    at snapshot time)."""
+
+    latencies: List[float] = dataclasses_field(default_factory=list)
+    queue_s: float = 0.0
+    stall_s: float = 0.0
+    completed: int = 0
+    with_deadline: int = 0
+    missed: int = 0
+    missed_in_queue: int = 0
+    demoted_rounds: int = 0
+
+    def note(self, r: "RagResponse") -> None:
+        self.latencies.append(r.latency_s)
+        self.queue_s += r.queue_s
+        self.stall_s += r.stall_s
+        self.completed += 1
+        self.demoted_rounds += r.demoted_rounds
+        if r.deadline_s is not None:
+            self.with_deadline += 1
+            self.missed += int(r.deadline_missed)
+            self.missed_in_queue += int(r.deadline_missed_in_queue)
+
+    def snapshot(self, tenant: str) -> TenantTelemetry:
+        lats = np.asarray(self.latencies)
+        return TenantTelemetry(
+            tenant=tenant, completed=self.completed,
+            p50_latency_s=float(np.percentile(lats, 50)) if len(lats) else 0.0,
+            p99_latency_s=float(np.percentile(lats, 99)) if len(lats) else 0.0,
+            mean_queue_s=self.queue_s / max(1, self.completed),
+            stall_s=self.stall_s,
+            with_deadline=self.with_deadline,
+            deadline_missed=self.missed,
+            missed_in_queue=self.missed_in_queue,
+            demoted_rounds=self.demoted_rounds)
 
 
 class TeleRAGServer:
@@ -272,7 +429,8 @@ class TeleRAGServer:
                  micro_batch: Optional[int] = None,
                  include_tail: bool = False,
                  batch_window_s: float = 0.0,
-                 decode_hook: Optional[Callable] = None):
+                 decode_hook: Optional[Callable] = None,
+                 dispatch: Optional[DispatchPolicy] = None):
         """``scheduler=None`` forms FIFO micro-batches and routes them
         round-robin (persistent across waves); a ``SchedulerPolicy``
         enables the paper's similarity grouping + cache-aware routing.
@@ -281,7 +439,11 @@ class TeleRAGServer:
         (0 = every distinct arrival instant is its own wave).
         ``decode_hook(replica, records, gen_tokens, round)`` runs real
         decode inside each round frontier, after the async prefetch
-        dispatch — prefetch is dispatched exactly once, by the policy."""
+        dispatch — prefetch is dispatched exactly once, by the policy.
+        ``dispatch`` orders each replica's queued micro-batches; the
+        default ``EdfDispatch`` runs priority classes then earliest
+        deadline first, which degrades to the legacy (priority, FIFO)
+        order when no request sets a deadline."""
         self.index = index
         self.cfg = cfg
         self.engines = [TeleRAGEngine(index, cfg, arch)
@@ -294,6 +456,7 @@ class TeleRAGServer:
                               decode_hook(_r, recs, toks, rnd))))
             for r, eng in enumerate(self.engines)]
         self.scheduler = scheduler
+        self.dispatch = dispatch if dispatch is not None else EdfDispatch()
         self.micro_batch = micro_batch
         self.batch_window_s = float(batch_window_s)
         self.dead: Set[int] = set()
@@ -312,12 +475,16 @@ class TeleRAGServer:
         self._n_completed = 0
         self._n_waves = 0
         self._n_batches = 0
+        self._tenant_acc: Dict[str, _TenantAcc] = {}
 
     # ---- replica health ----------------------------------------------------
     def mark_dead(self, replica: int) -> None:
+        """Exclude a replica from routing; its queued batches re-route
+        on the next wave (recorded in ``WaveDispatch.requeued``)."""
         self.dead.add(int(replica))
 
     def mark_alive(self, replica: int) -> None:
+        """Return a previously ``mark_dead``ed replica to routing."""
         self.dead.discard(int(replica))
 
     # ---- submission --------------------------------------------------------
@@ -390,13 +557,16 @@ class TeleRAGServer:
         return responses
 
     def telemetry(self) -> ServerTelemetry:
-        """One unified snapshot across every replica's counters."""
+        """One unified snapshot across every replica's counters, plus
+        per-tenant SLO attainment accumulated over completed responses."""
         return ServerTelemetry(
             completed=self._n_completed, waves=self._n_waves,
             dispatched_batches=self._n_batches,
             clock_s=self._global_now,
             replicas=tuple(ReplicaTelemetry.capture(i, e)
-                           for i, e in enumerate(self.engines)))
+                           for i, e in enumerate(self.engines)),
+            tenants=tuple(acc.snapshot(t)
+                          for t, acc in sorted(self._tenant_acc.items())))
 
     # ---- internals ---------------------------------------------------------
     def _form_waves(self, subs: List[_Submitted],
@@ -421,16 +591,26 @@ class TeleRAGServer:
 
     def _route_wave(self, wave_t: float, members: List[_Submitted]) -> None:
         """Group the wave into micro-batches and route them to replica
-        queues — reading each replica's *live* cache residency and
-        ledger occupancy at the wave's clock time."""
+        queues — reading each replica's *live* cache residency, ledger
+        occupancy, and per-tenant pool occupancy at the wave's clock
+        time.  Micro-batches are tenant-pure: similarity grouping runs
+        within each tenant's slice of the wave, so admission
+        reservations and ledger attribution are well-defined per batch
+        (a single-tenant wave reduces to the legacy grouping exactly)."""
         t0 = time.perf_counter()
         q = np.stack([np.asarray(s.request.q) for s in members])
         mb = self.micro_batch or len(members)
-        if self.scheduler is not None:
-            groups = self.scheduler.group(q, mb)
-        else:
-            groups = [list(range(i, min(i + mb, len(members))))
-                      for i in range(0, len(members), mb)]
+        by_tenant: Dict[str, List[int]] = {}
+        for i, s in enumerate(members):
+            by_tenant.setdefault(s.request.tenant, []).append(i)
+        groups: List[List[int]] = []
+        for idxs in by_tenant.values():
+            if self.scheduler is not None:
+                sub = self.scheduler.group(q[idxs], mb)
+            else:
+                sub = [list(range(i, min(i + mb, len(idxs))))
+                       for i in range(0, len(idxs), mb)]
+            groups.extend([idxs[j] for j in grp] for grp in sub)
         if self.scheduler is not None:
             if self.scheduler.needs_cluster_hints:
                 batch_clusters = []
@@ -442,8 +622,17 @@ class TeleRAGServer:
                 batch_clusters = [set() for _ in groups]
             caches = [e.buffer.resident_clusters() for e in self.engines]
             occupancy = [e.ledger.occupancy() for e in self.engines]
+            # the untenanted sentinel gets no spread penalty: legacy
+            # single-tenant routing must see exactly the PR-3 scores
+            tenant_occupancy = [
+                [0.0 for _ in self.engines]
+                if members[g[0]].request.tenant == "shared" else
+                [e.pool.tenant_pages(members[g[0]].request.tenant)
+                 / max(1, e.pool.num_pages) for e in self.engines]
+                for g in groups]
             assigns = self.scheduler.assign(batch_clusters, caches,
-                                            occupancy=occupancy)
+                                            occupancy=occupancy,
+                                            tenant_occupancy=tenant_occupancy)
         else:
             assigns = []
             for i in range(len(groups)):
@@ -477,25 +666,43 @@ class TeleRAGServer:
             self._queues[a.replica].append(_QueuedBatch(
                 avail_t=wave_t,
                 priority=min(s.request.priority for s in batch),
+                deadline_t=min(self._deadline_abs(s) for s in batch),
+                tenant=batch[0].request.tenant,
                 order=next(self._order), members=batch))
             touched.append(a.replica)
         for r in dict.fromkeys(touched):
             self._maybe_dispatch(r)
 
+    @staticmethod
+    def _deadline_abs(s: _Submitted) -> float:
+        """A submission's absolute event-clock deadline in seconds
+        (``inf`` when the request carries no SLO bound)."""
+        if s.request.deadline_s is None:
+            return float("inf")
+        return s.arrival_abs + float(s.request.deadline_s)
+
     def _maybe_dispatch(self, r: int) -> None:
-        """Feed the replica's next queued micro-batch to its runtime the
+        """Feed the replica's best queued micro-batch to its runtime the
         moment it is idle — at the later of the wave's clock time and
-        the runtime's own clock (head-of-line service)."""
+        the runtime's own clock.  "Best" is the ``DispatchPolicy``'s
+        call: the default EDF order runs priority classes first and the
+        earliest absolute deadline within a class (pure head-of-line
+        FIFO when nothing carries a deadline)."""
         if self._busy[r] or not self._queues[r]:
             return
         qr = self._queues[r]
-        pick = min(range(len(qr)), key=lambda i: (qr[i].priority,
-                                                  qr[i].order))
-        batch = qr.pop(pick)
         rt = self.runtimes[r]
+        pick = min(range(len(qr)),
+                   key=lambda i: self.dispatch.key(
+                       priority=qr[i].priority, deadline_t=qr[i].deadline_t,
+                       order=qr[i].order, now=rt.now))
+        batch = qr.pop(pick)
         t_disp = max(batch.avail_t, rt.now)
         for s in batch.members:
-            s.record = rt.submit(s.request.q, s.trace, arrival_t=t_disp)
+            s.record = rt.submit(s.request.q, s.trace, arrival_t=t_disp,
+                                 tenant=s.request.tenant,
+                                 priority=s.request.priority,
+                                 deadline_t=self._deadline_abs(s))
         rt.begin(rebase=False)
         self._busy[r] = True
         self._n_batches += 1
@@ -510,15 +717,25 @@ class TeleRAGServer:
         self._maybe_dispatch(r)
 
     def _response(self, s: _Submitted) -> RagResponse:
+        """Fold one finished submission into a RagResponse, stamping
+        the deadline verdict (split into missed-in-queue — the deadline
+        had already passed before the request ever reached a replica —
+        vs missed-in-service) and accumulating the tenant's SLO stats."""
         rec = s.record
-        missed = (s.request.deadline_s is not None
-                  and (rec.complete_t - s.arrival_abs
-                       > s.request.deadline_s + 1e-12))
-        return RagResponse(
+        deadline_abs = self._deadline_abs(s)
+        missed = rec.complete_t > deadline_abs + 1e-12
+        missed_in_queue = rec.admit_t > deadline_abs + 1e-12
+        resp = RagResponse(
             request_id=rec.request_id, pipeline=rec.pipeline,
             state=rec.state, replica=s.replica,
             doc_ids=list(rec.result.doc_ids),
             rounds=list(rec.result.rounds),
             timeline=list(rec.timeline),
             arrival_t=s.arrival_abs, admit_t=rec.admit_t,
-            complete_t=rec.complete_t, deadline_missed=missed)
+            complete_t=rec.complete_t, deadline_missed=missed,
+            deadline_missed_in_queue=missed_in_queue,
+            tenant=s.request.tenant, priority=s.request.priority,
+            deadline_s=s.request.deadline_s,
+            demoted_rounds=rec.demoted_rounds)
+        self._tenant_acc.setdefault(s.request.tenant, _TenantAcc()).note(resp)
+        return resp

@@ -63,6 +63,10 @@ class EngineConfig:
     chips: int = 1
     t_cc: Optional[float] = None                  # None => bytes/host_mem_bw
     seed: int = 0
+    # multi-tenant pool entitlements: tenant -> (floor_pages, max_pages)
+    # (max_pages None = may burst to the whole pool); None/{} = the
+    # legacy single-tenant pool
+    tenant_shares: Optional[Dict[str, Tuple[int, Optional[int]]]] = None
 
 
 @dataclass
@@ -81,15 +85,21 @@ class RoundTelemetry:
 
     # composed stage latencies under each system's overlap semantics
     def t_telerag(self) -> float:
+        """Round seconds under TeleRAG overlap: max(gen, prefetch) +
+        max(host, device search) + merge (§4.1 / App. C)."""
         t1 = max(self.t_llm_window, self.t_prefetch)
         t2 = max(self.t_host_search, self.t_dev_search) + self.t_merge
         return t1 + t2
 
     def t_cpu_baseline(self, t_cc: float) -> float:
+        """Round seconds with all retrieval on host at ``t_cc`` seconds
+        per cluster (no overlap)."""
         return self.t_llm_window + (self.hits + self.misses) * t_cc
 
     def t_runtime_fetch(self, page_bytes_per_cluster: float,
                         link_bw: float) -> float:
+        """Round seconds for demand-fetch at retrieval time: every
+        probed cluster crosses the link before the device search."""
         nb = (self.hits + self.misses) * page_bytes_per_cluster
         return (self.t_llm_window + nb / link_bw
                 + self.t_dev_search + self.t_merge)
@@ -141,9 +151,14 @@ class TeleRAGEngine:
             ledger=self.ledger)
         self.buffer = PrefetchBuffer(self.index.paged, pool=self.pool,
                                      quota_pages=cfg.buffer_pages)
+        for tenant, share in (cfg.tenant_shares or {}).items():
+            floor, cap = (share if isinstance(share, (tuple, list))
+                          else (share, None))
+            self.pool.set_tenant_share(tenant, floor, cap)
         self.admission = AdmissionController(
             self.pool,
-            spill=lambda target: self.cache.make_room(self.buffer, target))
+            spill=lambda target, protect=None: self.cache.make_room(
+                self.buffer, target, protect=protect))
 
     @property
     def policy(self) -> RetrievalPolicy:
@@ -160,6 +175,9 @@ class TeleRAGEngine:
         return self.cfg.buffer_pages * self.buffer.page_nbytes
 
     def prefetch_budget(self, gen_tokens: Sequence[int], batch: int) -> int:
+        """The round's lookahead byte budget: an explicit override, the
+        Appendix-C optimal policy (when an arch is set), or half the
+        prefetch capacity."""
         if self.cfg.prefetch_budget_bytes is not None:
             return self.cfg.prefetch_budget_bytes
         if self.arch is None:
@@ -171,6 +189,8 @@ class TeleRAGEngine:
             hbm_headroom_bytes=float(self.prefetch_capacity_bytes))
 
     def effective_tcc(self) -> float:
+        """Host per-cluster search seconds: measured (calibrate_tcc) >
+        configured (cfg.t_cc) > modeled from host memory bandwidth."""
         if self._measured_tcc is not None:
             return self._measured_tcc
         if self.cfg.t_cc is not None:
@@ -191,6 +211,8 @@ class TeleRAGEngine:
     # ---- timing primitives --------------------------------------------------
     def llm_window_seconds(self, gen_tokens: int, batch: int,
                            kv_len: int = 1024) -> float:
+        """Modeled decode seconds for one generation window of
+        ``gen_tokens`` at the given batch size (0.0 with no arch)."""
         if self.arch is None or gen_tokens == 0:
             return 0.0
         per = budget_mod.decode_step_seconds(self.arch, self.cfg.hw,
@@ -259,12 +281,17 @@ class TeleRAGEngine:
 
     def lookahead(self, q_in: np.ndarray, gen_tokens: Sequence[int],
                   ) -> Tuple[int, int]:
+        """Legacy two-value lookahead: (bytes_planned, clusters_fetched)
+        with synchronous spill-or-cap admission."""
         nbytes, nfetch, _ = self.lookahead_ex(q_in, gen_tokens)
         return nbytes, nfetch
 
     def retrieve(self, q_out: np.ndarray, *, now: float = 0.0,
-                 ) -> RetrievalResult:
-        return self.policy.retrieve(self, q_out, now=now)
+                 tenant: str = "shared") -> RetrievalResult:
+        """Run the mode policy's retrieval for the rewritten queries at
+        event-clock time ``now`` (seconds); ``tenant`` scopes any
+        demand-fetch eviction to the requester's floor view."""
+        return self.policy.retrieve(self, q_out, now=now, tenant=tenant)
 
     def end_batch(self) -> None:
         """Post-batch consolidation (paper App. D reproducibility rule)."""
@@ -277,6 +304,8 @@ class TeleRAGEngine:
 
     # ---- fault tolerance ------------------------------------------------------
     def snapshot(self) -> dict:
+        """Host-side state capture (residency, hotness, lifetime stats,
+        ledger, admission counters) for replica restart."""
         return {
             "hotness": dict(self.cache.hotness),
             "resident": sorted(self.buffer.resident_clusters()),
@@ -284,6 +313,9 @@ class TeleRAGEngine:
                       self.buffer.stats.rounds),
             "ledger": self.ledger.snapshot(),
             "admission": dataclasses.asdict(self.admission.stats),
+            "admission_per_tenant": {
+                t: dataclasses.asdict(s)
+                for t, s in self.admission.per_tenant.items()},
         }
 
     def restore(self, snap: dict) -> None:
@@ -303,6 +335,9 @@ class TeleRAGEngine:
         self.buffer.stats.pages_h2d = p
         self.buffer.stats.rounds = r
         # a restarted replica must not silently zero its admission
-        # telemetry (older snapshots without the key keep the fresh zeros)
+        # telemetry — aggregate AND per-tenant slices (older snapshots
+        # without the keys keep the fresh zeros)
         if "admission" in snap:
             self.admission.stats = AdmissionStats(**snap["admission"])
+        for t, s in snap.get("admission_per_tenant", {}).items():
+            self.admission.per_tenant[t] = AdmissionStats(**s)

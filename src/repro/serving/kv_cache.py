@@ -30,6 +30,9 @@ from repro.models import transformer as tf
 
 @dataclass
 class CacheLease:
+    """One leased decode cache: the JAX cache pytree plus its bucket
+    shape, exact byte footprint, and (pool-backed) page lease."""
+
     cache: dict
     batch: int
     max_len: int
@@ -38,8 +41,15 @@ class CacheLease:
 
 
 class KVCacheManager:
+    """Decode-cache allocator: one cache per (batch, max_len) bucket,
+    recycled across requests, with every live bucket's exact tensor
+    bytes leased from the shared ``DevicePagePool`` (category ``"kv"``)
+    when a pool is given."""
+
     def __init__(self, cfg: ArchConfig, dtype=jnp.bfloat16, *,
                  pool: Optional[DevicePagePool] = None):
+        """``pool=None`` keeps the manager a standalone allocator (no
+        ledger accounting, no admission pressure)."""
         self.cfg = cfg
         self.dtype = dtype
         self.pool = pool
@@ -48,6 +58,10 @@ class KVCacheManager:
 
     def acquire(self, batch: int, max_len: int, *, fresh: bool = False,
                 ) -> CacheLease:
+        """Lease a decode cache for ``batch`` sequences of ``max_len``
+        (recycled bucket when available, else a fresh pool-backed
+        allocation; raises ``PoolExhausted`` when the pool cannot fit
+        it).  ``fresh=True`` forces zeroed state."""
         key = (batch, max_len)
         nbytes = self.nbytes(batch, max_len)
         cache, page_lease = self._pool_buckets.pop(key, (None, None))
@@ -96,6 +110,8 @@ class KVCacheManager:
         return freed
 
     def nbytes(self, batch: int, max_len: int) -> int:
+        """Exact tensor bytes of one (batch, max_len) bucket — matches
+        the ledger's ``"kv"`` charge to the byte."""
         key = (batch, max_len)
         if key not in self._nbytes_memo:     # eval_shape traces init_cache;
             shapes = jax.eval_shape(         # don't re-trace per acquire

@@ -117,14 +117,17 @@ class MultiReplicaOrchestrator:
 
     @property
     def replicas(self) -> List[TeleRAGEngine]:
+        """The server's replica engines (legacy attribute name)."""
         return self.server.engines
 
     @property
     def scheduler(self) -> SchedulerPolicy:
+        """The server's SchedulerPolicy (legacy attribute name)."""
         return self.server.scheduler
 
     @property
     def nprobe_for_sched(self) -> int:
+        """Clusters probed per query for routing hints (legacy name)."""
         return self.server.nprobe_for_sched
 
     def run_global_batch(self, q_in: np.ndarray,
@@ -132,6 +135,10 @@ class MultiReplicaOrchestrator:
                          micro_batch: int = 4,
                          dead_replicas: Optional[set] = None,
                          ) -> GlobalBatchReport:
+        """DEPRECATED: serve one simultaneous-arrival wave through the
+        server and translate the responses back into the legacy
+        ``GlobalBatchReport`` shape (doc ids exact, telemetry pinned to
+        1e-6 against the old serial drain in tests/test_api.py)."""
         warnings.warn(
             "run_global_batch is deprecated; submit RagRequests to "
             "TeleRAGServer and drain() — closed-loop batch replay is one "

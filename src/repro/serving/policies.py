@@ -42,6 +42,8 @@ class LatencyContext:
 
     @classmethod
     def from_engine(cls, engine: "TeleRAGEngine") -> "LatencyContext":
+        """Read the constants off a live engine (t_cc seconds/cluster,
+        mean cluster bytes, link bytes/second)."""
         return cls(
             t_cc=engine.effective_tcc(),
             cluster_bytes=float(
@@ -76,7 +78,12 @@ class RetrievalPolicy:
         return 0, 0, None
 
     def retrieve(self, engine: "TeleRAGEngine", q_out: np.ndarray, *,
-                 now: float = 0.0) -> RetrievalResult:
+                 now: float = 0.0,
+                 tenant: str = "shared") -> RetrievalResult:
+        """Execute the round's retrieval for the rewritten queries at
+        event-clock time ``now`` (seconds).  ``tenant`` is the
+        requesting wave's tenant — policies that evict to make room
+        (demand fetch) must scope the eviction to its floor view."""
         raise NotImplementedError
 
     # ---- timing plane -----------------------------------------------------
@@ -118,17 +125,21 @@ _POLICIES: Dict[str, RetrievalPolicy] = {}
 
 
 def register_policy(cls: Type[RetrievalPolicy]) -> Type[RetrievalPolicy]:
+    """Class decorator: instantiate and register a policy under its
+    ``name`` (how a new baseline plugs in without engine edits)."""
     _POLICIES[cls.name] = cls()
     return cls
 
 
 def get_policy(mode: str) -> RetrievalPolicy:
+    """The registered policy instance for ``mode`` (KeyError if none)."""
     if mode not in _POLICIES:
         raise KeyError(mode)
     return _POLICIES[mode]
 
 
 def policy_names() -> Tuple[str, ...]:
+    """Registered policy names (the valid ``EngineConfig.mode`` values)."""
     return tuple(_POLICIES)
 
 
@@ -178,11 +189,16 @@ class TeleRAGPolicy(RetrievalPolicy):
                              free_pages=ticket.pages_granted,
                              ranked=plan.ranked)
         if plan.fetch:
+            # the dispatch-time fallback eviction must honor tenant
+            # floors exactly like the admission spill does — otherwise
+            # a full buffer at transfer time would let this wave dig
+            # another tenant below its guaranteed floor
+            protect = engine.admission.spill_protect(ticket.tenant)
             ev = engine.transfer.submit(
                 plan.fetch, now=now, nbytes=plan.bytes_planned,
                 reservation=ticket.reservation,
-                make_room=lambda pages: engine.cache.make_room(engine.buffer,
-                                                               pages))
+                make_room=lambda pages: engine.cache.make_room(
+                    engine.buffer, pages, protect=protect))
         else:
             # nothing to move: no link event (a 0-byte event could still
             # inherit a channel-queue wait), but fold any queued device
@@ -196,7 +212,9 @@ class TeleRAGPolicy(RetrievalPolicy):
             [c for c in plan.fetch if engine.buffer.is_resident(c)])
         return plan.bytes_planned, len(plan.fetch), ev
 
-    def retrieve(self, engine, q_out, *, now=0.0):
+    def retrieve(self, engine, q_out, *, now=0.0, tenant="shared"):
+        """Hybrid retrieval: device search over resident hits + host
+        search over misses (no eviction at retrieval time)."""
         ranked_out = probe(q_out, engine.index, engine.cfg.nprobe)
         return self._hybrid_retrieve(engine, q_out, ranked_out)
 
@@ -213,7 +231,8 @@ class CpuBaselinePolicy(RetrievalPolicy):
 
     name = "cpu_baseline"
 
-    def retrieve(self, engine, q_out, *, now=0.0):
+    def retrieve(self, engine, q_out, *, now=0.0, tenant="shared"):
+        """Search every probed cluster on host (no device state)."""
         ranked_out = probe(q_out, engine.index, engine.cfg.nprobe)
         res_s, res_i, miss = [], [], []
         for b in range(q_out.shape[0]):
@@ -239,13 +258,19 @@ class RuntimeFetchPolicy(RetrievalPolicy):
 
     name = "runtime_fetch"
 
-    def retrieve(self, engine, q_out, *, now=0.0):
+    def retrieve(self, engine, q_out, *, now=0.0, tenant="shared"):
+        """Demand-fetch every probed cluster at retrieval time, then
+        run the hybrid search (no lookahead overlap).  The eviction
+        that makes room honors other tenants' floors from the
+        requesting ``tenant``'s view."""
         ranked_out = probe(q_out, engine.index, engine.cfg.nprobe)
         # fetch exactly the probed clusters now (not overlapped)
         need = sorted(set(int(c) for r in ranked_out for c in r))
         pages = sum(int(engine.index.paged.cluster_num_pages[c])
                     for c in need if not engine.buffer.is_resident(c))
-        engine.cache.make_room(engine.buffer, pages)
+        engine.cache.make_room(engine.buffer, pages,
+                               protect=engine.admission.spill_protect(
+                                   tenant))
         engine.transfer.submit(need, now=now, kind="demand",
                                nbytes=pages * engine.buffer.page_nbytes)
         return self._hybrid_retrieve(engine, q_out, ranked_out)

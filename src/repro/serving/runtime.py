@@ -78,11 +78,19 @@ class Span:
     round_index: int = -1
 
     def overlaps(self, lo: float, hi: float) -> bool:
+        """True iff this span intersects the open interval (lo, hi)."""
         return self.start < hi and lo < self.end
 
 
 @dataclass(eq=False)                   # identity semantics: records are
 class RequestRecord:                   # live state, and `q` is an ndarray
+    """One request's live serving state on a replica runtime: identity,
+    event-clock timestamps (seconds), state-machine position, and the
+    span timeline the telemetry layer reads.  ``deadline_t`` is the
+    request's *absolute* deadline on the shared event clock (``inf`` =
+    no SLO); ``tenant``/``priority`` carry the SLO identity the
+    dispatcher and admission control act on."""
+
     request_id: int
     pipeline: str
     trace: RequestTrace
@@ -94,13 +102,18 @@ class RequestRecord:                   # live state, and `q` is an ndarray
     state: RequestState = RequestState.QUEUED
     timeline: List[Span] = field(default_factory=list)
     round_start: List[float] = field(default_factory=list)
+    tenant: str = "shared"
+    priority: int = 0
+    deadline_t: float = float("inf")
+    demoted_rounds: int = 0            # rounds whose prefetch was demoted
 
     @property
     def latency(self) -> float:
-        """Admit→complete on the event clock."""
+        """Admit→complete on the event clock (seconds)."""
         return self.complete_t - self.admit_t
 
     def spans(self, kind: str) -> List[Span]:
+        """All timeline spans of one kind (e.g. ``"pressure_stall"``)."""
         return [s for s in self.timeline if s.kind == kind]
 
 
@@ -148,6 +161,7 @@ class _Group:
     cur_q: np.ndarray                        # [B, d], drifts per round
     scheduled_rounds: set = field(default_factory=set)
     remaining: int = 0                       # members not yet COMPLETE
+    tenant: str = "shared"                   # admission/ledger attribution
 
 
 class RetrievalRuntime:
@@ -187,19 +201,27 @@ class RetrievalRuntime:
 
     @property
     def ctx(self) -> LatencyContext:
+        """The timing-plane constants (lazily built from the engine)."""
         if self._ctx is None:
             self._ctx = LatencyContext.from_engine(self.engine)
         return self._ctx
 
     # ---- submission --------------------------------------------------------
     def submit(self, q: np.ndarray, trace: RequestTrace,
-               arrival_t: float = 0.0) -> RequestRecord:
+               arrival_t: float = 0.0, *, tenant: str = "shared",
+               priority: int = 0,
+               deadline_t: float = float("inf")) -> RequestRecord:
         """Queue one request. ``arrival_t`` is relative to this run's
-        start (the clock is monotonic across run() calls)."""
+        start (the clock is monotonic across run() calls);
+        ``deadline_t`` is the request's absolute event-clock deadline in
+        seconds (``inf`` = no SLO) and ``tenant``/``priority`` tag it
+        for tenant-scoped admission and SLO accounting."""
         rec = RequestRecord(
             request_id=trace.request_id, pipeline=trace.pipeline,
             trace=trace, q=np.asarray(q), arrival_t=float(arrival_t),
-            result=RequestResult(trace.request_id, trace.pipeline))
+            result=RequestResult(trace.request_id, trace.pipeline),
+            tenant=tenant, priority=int(priority),
+            deadline_t=float(deadline_t))
         self._pending.append(rec)
         self._batch.append(rec)
         return rec
@@ -304,7 +326,8 @@ class RetrievalRuntime:
             members = [ready[i] for i in gi]
             plans = [round_plan(m.trace) for m in members]
             g = _Group(gid=next(self._gid), members=members, plans=plans,
-                       cur_q=np.stack([m.q for m in members]).copy())
+                       cur_q=np.stack([m.q for m in members]).copy(),
+                       tenant=members[0].tenant)
             for m, p in zip(members, plans):
                 m.admit_t = now
                 m.state = RequestState.ADMITTED
@@ -337,12 +360,28 @@ class RetrievalRuntime:
         gen_tokens = [g.plans[i][rnd][0] for i in active]
         act_q = g.cur_q[active]
 
+        # 0a) slack-based demotion: a round whose every active member is
+        #     already past its deadline cannot make its SLO no matter
+        #     how fast retrieval runs — spending pool pages and link
+        #     bandwidth on its lookahead only starves requests that CAN
+        #     still meet theirs.  The round executes (misses go to host
+        #     search) but its prefetch is demoted to nothing.
+        demoted = (policy.prefetches and bool(active)
+                   and all(now > g.members[i].deadline_t + 1e-12
+                           for i in active))
+        if demoted:
+            for i in active:
+                req = g.members[i]
+                req.demoted_rounds += 1
+                self.event_log.append((now, "prefetch_demoted",
+                                       req.request_id))
+
         # 0) admission: the wave's lookahead plan reserves its headroom
         #    up front; if the pool cannot promise the pages, the whole
         #    round parks and resumes on a page-free event — the planner
         #    never silently truncates under someone else's pressure
         plan = ticket = None
-        if policy.prefetches:
+        if policy.prefetches and not demoted:
             plan = eng.plan_lookahead(act_q, gen_tokens, wave_key=g.gid)
             # pin the plan's resident hits BEFORE admission: the spill
             # that makes room for this wave's reservation must not evict
@@ -356,13 +395,15 @@ class RetrievalRuntime:
                                for l in eng.pool.leases.values()))
             ticket = eng.admission.admit(plan.pages_planned,
                                          owner=f"g{g.gid}r{rnd}",
-                                         can_wait=waitable and not force)
+                                         can_wait=waitable and not force,
+                                         tenant=g.tenant)
             if ticket is None:
                 # a parked wave holds nothing: keeping tentative hit pins
                 # would make other parked waves mutually wait on them —
                 # the plan is recomputed from scratch on resume anyway
                 eng.buffer.release_pins(g.gid, hit_pins)
-                eng.admission.park((g, rnd), plan.pages_planned)
+                eng.admission.park((g, rnd), plan.pages_planned,
+                                   tenant=g.tenant)
                 for i in active:
                     req = g.members[i]
                     req.state = RequestState.PRESSURE_STALLED
@@ -371,9 +412,15 @@ class RetrievalRuntime:
                 return
 
         # 1) lookahead prefetch keyed on the *current* query, dispatched
-        #    (async) at the frontier — in flight during generation
-        nbytes, nfetch, ev = eng.lookahead_ex(act_q, gen_tokens, now=now,
-                                              plan=plan, ticket=ticket)
+        #    (async) at the frontier — in flight during generation.  A
+        #    demoted round moves nothing (it only flushes any queued
+        #    device invalidations so the search LUT stays consistent).
+        if demoted:
+            nbytes, nfetch, ev = 0, 0, None
+            eng.buffer.flush_invalidations()
+        else:
+            nbytes, nfetch, ev = eng.lookahead_ex(act_q, gen_tokens, now=now,
+                                                  plan=plan, ticket=ticket)
         if plan is not None:
             # the wave owns its fetched set too until its completion event
             eng.buffer.pin_clusters(g.gid, plan.fetch)
@@ -399,7 +446,7 @@ class RetrievalRuntime:
         q_out = np.stack(q_out_rows)
 
         # 3) hybrid retrieval (device hits + host misses + merge)
-        res = eng.retrieve(q_out, now=now)
+        res = eng.retrieve(q_out, now=now, tenant=g.tenant)
 
         # 4) per-request telemetry + event-clock scheduling
         t_transfer = nbytes / eng.cfg.hw.host_link_bw
@@ -432,7 +479,7 @@ class RetrievalRuntime:
                               else max(gen_end, ready))
             round_end = retrieve_start + policy.search_seconds(rt, self.ctx)
 
-            if policy.prefetches:
+            if policy.prefetches and not demoted:
                 req.timeline.append(Span("prefetch_dispatch", rs, rs, rnd))
                 self._push(rs, "mark",
                            (req, RequestState.PREFETCHING, "prefetch"))

@@ -37,10 +37,12 @@ class RequestTrace:
 
     @property
     def rounds(self) -> int:
+        """Number of retrieval rounds in the trace."""
         return sum(1 for s in self.stages if s.kind == "retrieve")
 
     @property
     def total_gen_tokens(self) -> int:
+        """Decode tokens summed over every generate/judge stage."""
         return sum(s.gen_tokens for s in self.stages)
 
     def pre_retrieval_tokens(self) -> List[int]:
@@ -105,6 +107,8 @@ def make_trace(pipeline: str, request_id: int, rng: np.random.Generator,
 
 def make_traces(pipeline: str, n: int, *, seed: int = 0,
                 length_scale: float = 1.0) -> List[RequestTrace]:
+    """``n`` seeded traces for one pipeline (request ids 0..n-1 from
+    one RNG stream, so a (pipeline, seed) pair fixes the workload)."""
     rng = np.random.default_rng(seed)
     return [make_trace(pipeline, i, rng, length_scale) for i in range(n)]
 

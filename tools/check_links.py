@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Check that intra-repo markdown links resolve.
+
+Walks every tracked ``*.md`` file (skipping caches and VCS dirs),
+extracts ``[text](target)`` links, and verifies that each *relative*
+target — after stripping any ``#anchor`` — exists on disk, resolved
+against the linking file's directory.  External links (``http(s)://``,
+``mailto:``) and pure in-page anchors (``#...``) are ignored.
+
+Exits non-zero listing every dead link (file:line -> target), so the CI
+docs job fails the moment a rename orphans a reference.
+
+Run: python tools/check_links.py [root]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "node_modules",
+             ".claude", "experiments"}
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files(root: str):
+    """Yield every markdown file under ``root``, skipping cache/VCS dirs."""
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def check_file(path: str, root: str):
+    """Scan one markdown file; returns (dead, n_links) where ``dead``
+    is [(lineno, target), ...] for unresolvable relative links."""
+    dead = []
+    n_links = 0
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for target in LINK_RE.findall(line):
+                n_links += 1
+                if target.startswith(EXTERNAL) or target.startswith("#"):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                base = root if rel.startswith("/") else os.path.dirname(path)
+                resolved = os.path.normpath(os.path.join(base,
+                                                         rel.lstrip("/")))
+                if not os.path.exists(resolved):
+                    dead.append((lineno, target))
+    return dead, n_links
+
+
+def main() -> int:
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1
+                           else os.path.join(os.path.dirname(__file__), ".."))
+    n_files = n_links = 0
+    failures = []
+    for path in sorted(md_files(root)):
+        n_files += 1
+        dead, links = check_file(path, root)
+        n_links += links
+        for lineno, target in dead:
+            failures.append(f"{os.path.relpath(path, root)}:{lineno} -> "
+                            f"{target}")
+    if failures:
+        print(f"DEAD LINKS ({len(failures)}):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"ok: {n_files} markdown files, {n_links} links, all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
