@@ -62,11 +62,14 @@ def run(pipeline: str = "hyde", n_queries: int = 16):
 
 
 def run_admission(n_queries: int = 8):
-    """Serve two disjoint-neighbourhood waves through a pool too small
-    for both plans at once; report stall/resume/spill admission stats."""
+    """Serve disjoint-neighbourhood waves through a pool too small for
+    all plans at once; report stall/resume/spill admission stats.  Runs
+    the default per-request (reform) runtime: queries are ordered so the
+    EDF wave former's FIFO chunks of ``micro_batch`` are the disjoint
+    neighbourhoods by construction, and parked requests rejoin waves as
+    completions free pages."""
     from repro.serving import (EngineConfig, RequestState, RetrievalRuntime,
                                TeleRAGEngine, make_traces)
-    from repro.core.schedulers import TeleRAGScheduler
 
     store = core.synthetic_datastore(24_000, dim=96, seed=7, num_topics=48)
     index = core.build_ivf(store, 48, page_size=64, kmeans_iters=3)
@@ -76,8 +79,7 @@ def run_admission(n_queries: int = 8):
     eng = TeleRAGEngine(index, EngineConfig(
         nprobe=12, top_k=3, buffer_pages=pool_pages, lookahead_rank=16,
         kernel_mode="ref", chips=4, seed=3), get_arch("llama3-8b"))
-    runtime = RetrievalRuntime(
-        eng, scheduler=TeleRAGScheduler(cache_aware=False), micro_batch=2)
+    runtime = RetrievalRuntime(eng, micro_batch=2)
 
     cents = index.centroids / np.linalg.norm(index.centroids, axis=-1,
                                              keepdims=True)

@@ -1,0 +1,110 @@
+"""Per-request continuous batching vs static groups on a heterogeneous
+round-count workload.
+
+The workload mixes the §5.1 pipelines (hyde: 1 retrieval round, iter:
+2-3, irg: 3, flare: 2-4) with staggered arrivals, so round frontiers
+desynchronize immediately — exactly the regime where a static group's
+lockstep drags every member at the pace of its slowest.  The same
+request stream runs through both dispatch disciplines of one
+``TeleRAGServer``:
+
+  * **static** (``continuous=False``): admission groups stay batched
+    for every round; one micro-batch in flight per replica, later
+    batches queue behind the drain (the legacy, shim-pinned path);
+  * **per-request** (``continuous=True``): the dynamic wave former
+    re-batches whichever requests are ready at each round frontier,
+    arrivals join in-flight waves mid-stream, and completions are
+    consumed per request.
+
+Asserts (the CI guard): the per-request mode completes every request,
+its mean arrival→complete latency is no worse than static groups, and
+its throughput (completions per event-clock second) does not regress.
+"""
+
+import argparse
+import itertools
+
+import numpy as np
+
+from repro.serving import make_traces, summarize_latency
+from benchmarks.common import (bench_queries, emit, make_server,
+                               serve_requests, write_csv)
+
+PIPELINE_MIX = ("hyde", "iter", "irg", "flare")
+
+
+def heterogeneous_traces(n: int, seed: int = 0):
+    """``n`` traces cycling through the pipeline mix (heterogeneous
+    round counts: 1 to ~4 retrieval rounds side by side)."""
+    per = -(-n // len(PIPELINE_MIX))
+    pools = [make_traces(p, per, seed=seed + i)
+             for i, p in enumerate(PIPELINE_MIX)]
+    out = list(itertools.islice(
+        itertools.chain.from_iterable(zip(*pools)), n))
+    # re-id in submission order so responses map 1:1
+    for i, t in enumerate(out):
+        t.request_id = i
+    return out
+
+
+def _run(continuous: bool, n_requests: int, replicas: int,
+         micro_batch: int, seed: int):
+    srv = make_server(replicas=replicas, micro_batch=micro_batch,
+                      buffer_pages=1024, continuous=continuous, seed=seed)
+    q = bench_queries(n_requests, seed=seed + 1)
+    traces = heterogeneous_traces(n_requests, seed=seed + 2)
+    rng = np.random.default_rng(seed + 3)
+    arrivals = np.cumsum(rng.exponential(0.02, n_requests))
+    resp = serve_requests(srv, q, traces, arrivals)
+    assert len(resp) == n_requests
+    assert all(r.state.value == "complete" for r in resp), \
+        [r.state for r in resp if r.state.value != "complete"]
+    lats = np.array([r.latency_s for r in resp])
+    clock = srv.telemetry().clock_s
+    return srv, resp, float(lats.mean()), n_requests / max(clock, 1e-12)
+
+
+def run(n_requests: int = 32, replicas: int = 2, micro_batch: int = 4,
+        seed: int = 71):
+    rows = []
+    stats = {}
+    for continuous in (False, True):
+        srv, resp, mean_lat, tput = _run(continuous, n_requests, replicas,
+                                         micro_batch, seed)
+        name = "per_request" if continuous else "static_groups"
+        stats[continuous] = (mean_lat, tput)
+        lats = np.array([r.latency_s for r in resp])
+        rows.append({
+            "mode": name, "requests": n_requests, "replicas": replicas,
+            "micro_batch": micro_batch,
+            "mean_ms": round(mean_lat * 1e3, 2),
+            "p50_ms": round(float(np.percentile(lats, 50)) * 1e3, 2),
+            "p95_ms": round(float(np.percentile(lats, 95)) * 1e3, 2),
+            "throughput_rps": round(tput, 2),
+            "waves_executed": sum(len(rt.wave_log) for rt in srv.runtimes),
+            "stall_ms": round(sum(r.stall_s for r in resp) * 1e3, 2),
+        })
+        emit(f"continuous/{name}", mean_lat * 1e6,
+             f"tput_rps={rows[-1]['throughput_rps']};"
+             f"p95_ms={rows[-1]['p95_ms']}")
+        print(f"# {name}: {summarize_latency(resp)} "
+              f"tput={tput:.2f} req/s")
+    # the point of the refactor: re-forming waves per request must not
+    # cost latency OR throughput on heterogeneous round counts
+    assert stats[True][0] <= stats[False][0] * (1 + 1e-9), \
+        f"per-request mean latency regressed: {stats}"
+    assert stats[True][1] >= stats[False][1] * (1 - 1e-9), \
+        f"per-request throughput regressed: {stats}"
+    write_csv("continuous_vs_static", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI guard: small fast pass")
+    args = ap.parse_args()
+    if args.smoke:
+        run(n_requests=12, replicas=2, micro_batch=2)
+    else:
+        run()

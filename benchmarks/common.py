@@ -82,14 +82,17 @@ def make_engine(mode: str = "telerag", *, buffer_pages: int = 640,
 def make_server(mode: str = "telerag", *, replicas: int = 1,
                 scheduler=None, micro_batch=None, buffer_pages: int = 640,
                 budget_bytes=None, cache: bool = False, arch="llama3-8b",
-                chips: int = 4, seed: int = 0) -> TeleRAGServer:
+                chips: int = 4, seed: int = 0,
+                continuous: bool = False) -> TeleRAGServer:
     """A TeleRAGServer over the shared bench index (the serving
-    front-end the benches drive instead of raw executors)."""
+    front-end the benches drive instead of raw executors).
+    ``continuous=True`` enables per-request continuous batching."""
     cfg = bench_cfg(mode, buffer_pages=buffer_pages,
                     budget_bytes=budget_bytes, cache=cache, chips=chips,
                     seed=seed)
     return TeleRAGServer(bench_index(), cfg, replicas, get_arch(arch),
-                         scheduler=scheduler, micro_batch=micro_batch)
+                         scheduler=scheduler, micro_batch=micro_batch,
+                         continuous=continuous)
 
 
 def serve_requests(srv: TeleRAGServer, q, traces, arrivals=None):

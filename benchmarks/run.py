@@ -21,12 +21,14 @@ def main() -> None:
     if args.smoke:
         args.quick = True
         if args.only is None:
-            args.only = "overlap,sched,admission,openloop,tenants"
+            args.only = ("overlap,sched,admission,openloop,tenants,"
+                         "continuous")
 
-    from benchmarks import (bench_breakdown, bench_budget, bench_hitrate,
-                            bench_kernels, bench_latency, bench_nprobe,
-                            bench_openloop, bench_overlap, bench_sched,
-                            bench_scaling, bench_tenants, bench_throughput)
+    from benchmarks import (bench_breakdown, bench_budget, bench_continuous,
+                            bench_hitrate, bench_kernels, bench_latency,
+                            bench_nprobe, bench_openloop, bench_overlap,
+                            bench_sched, bench_scaling, bench_tenants,
+                            bench_throughput)
 
     benches = {
         "overlap": lambda: bench_overlap.run(64 if args.quick else 256),
@@ -53,6 +55,9 @@ def main() -> None:
         "tenants": lambda: bench_tenants.run(
             n_latency=4 if args.quick else 8,
             n_batch=10 if args.quick else 24),
+        "continuous": lambda: bench_continuous.run(
+            n_requests=12 if args.quick else 32,
+            micro_batch=2 if args.quick else 4),
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

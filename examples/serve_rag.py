@@ -13,7 +13,10 @@ admission telemetry.  Wave 4 is the multi-tenant SLO mix: a
 deadline-carrying interactive tenant (with a guaranteed pool floor)
 shares the fleet with a bursty batch tenant; EDF dispatch + per-tenant
 reservations keep the interactive tenant's deadlines while both
-complete, and the per-tenant telemetry lines show the split.
+complete, and the per-tenant telemetry lines show the split.  Wave 5
+contrasts static-group execution with per-request continuous batching
+(`continuous=True`): the dynamic wave former re-batches at every round
+frontier, so heterogeneous round counts stop dragging batch-mates.
 
 Run: PYTHONPATH=src python examples/serve_rag.py [--requests 24]
 """
@@ -136,6 +139,27 @@ def main():
         print(t.line())
     missed = [r.request_id for r in resp4 if r.deadline_missed]
     print(f"all {len(resp4)} served; deadline misses: {missed or 'none'}")
+
+    print("\n== wave 5: per-request continuous batching vs static "
+          "groups (heterogeneous round counts) ==")
+    n5 = args.requests
+    q5 = wave(n5)
+    pipes = ["hyde", "iter", "irg", "flare"]
+    mixed = [make_traces(pipes[i % len(pipes)], 1, seed=8 + i)[0]
+             for i in range(n5)]
+    for i, t in enumerate(mixed):
+        t.request_id = i
+    for continuous in (False, True):
+        srv5 = TeleRAGServer(index, cfg, 1, get_arch("llama3-8b"),
+                             micro_batch=args.micro_batch,
+                             continuous=continuous)
+        resp5 = srv5.serve([
+            RagRequest(q=q5[i], trace=mixed[i], arrival_t=0.002 * i)
+            for i in range(n5)])
+        label = "per-request" if continuous else "static-groups"
+        n_waves = sum(len(rt.wave_log) for rt in srv5.runtimes)
+        print(f"{label:>14}: {summarize_latency(resp5)} "
+              f"({n_waves} waves executed)")
 
     print("\n== unified telemetry snapshot ==")
     print(srv.telemetry().summary())

@@ -146,6 +146,19 @@ class PrefetchBuffer:
     def pinned_clusters(self) -> Set[int]:
         return {c for c, l in self._leases.items() if l.refcount > 1}
 
+    def _own_lease_ids(self, key: object) -> Set[int]:
+        """Lease ids pinned under ``key`` — a single pin key, or a
+        tuple/list/set of keys (a continuous-batching wave's view is
+        the union of its member requests' pins)."""
+        if key is None:
+            return set()
+        if isinstance(key, (tuple, list, set, frozenset)):
+            own: Set[int] = set()
+            for k in key:
+                own.update(l.lease_id for l in self._pins.get(k, ()))
+            return own
+        return {l.lease_id for l in self._pins.get(key, ())}
+
     def reclaimable_split(self, key: object,
                           hit_clusters: Sequence[int] = (),
                           ) -> Tuple[int, int]:
@@ -154,9 +167,10 @@ class PrefetchBuffer:
         completion events release them — legitimate stall targets),
         *spillable* pages are unpinned residency evictable right now.
         The wave's own pins and the given ``hit_clusters`` (residency
-        the wave is about to pin as its device hits) count as neither."""
-        own = ({l.lease_id for l in self._pins.get(key, ())}
-               if key is not None else set())
+        the wave is about to pin as its device hits) count as neither.
+        ``key`` may be one pin key or a collection of per-request pin
+        keys (the wave's members under continuous batching)."""
+        own = self._own_lease_ids(key)
         hits = {int(c) for c in hit_clusters}
         waitable = spillable = 0
         for c, lease in self._leases.items():

@@ -14,6 +14,13 @@ Routing additionally reads per-replica ledger occupancy and — for
 multi-tenant serving — per-tenant pool occupancy, spreading a tenant's
 batches away from replicas it already loads.
 
+Wave former: under per-request continuous batching there is no static
+micro-batch — at every round frontier ``SchedulerPolicy.reform_wave``
+re-batches whichever requests are *ready now* into fresh tenant-pure
+waves (default: EDF within priority classes, FIFO among equals,
+``micro_batch``-capped), so a straggler never drags its former
+batch-mates and mid-stream admits join in-flight work.
+
 Dispatch policy: once micro-batches are queued on a replica, a
 ``DispatchPolicy`` orders them.  ``EdfDispatch`` (the default) runs
 priority classes first and earliest-deadline-first inside a class; with
@@ -183,6 +190,43 @@ class SchedulerPolicy:
         reading live replica caches, ledger occupancy fractions, and —
         for multi-tenant pools — per-tenant occupancy fractions."""
         raise NotImplementedError
+
+    def reform_wave(self, ready: Sequence, *,
+                    micro_batch: Optional[int] = None,
+                    now: float = 0.0) -> List[List[int]]:
+        """Re-batch the *ready set* at a continuous-batching round
+        frontier: partition the requests that can start a round right
+        now into execution waves, returned as lists of indices into
+        ``ready`` (first wave dispatches first).
+
+        ``ready`` items expose ``tenant`` / ``priority`` /
+        ``deadline_t`` (absolute event-clock seconds, ``inf`` = no
+        SLO); their order is arrival order, the FIFO anchor.  The
+        default is EDF/tenant-aware: order by (priority class, absolute
+        deadline, arrival), then greedily fill **tenant-pure** waves of
+        at most ``micro_batch`` members (``None`` = unbounded).  Every
+        ready request is placed; a policy override may instead *defer*
+        requests (leave them out of every wave) to wait for batch-mates
+        — the runtime keeps them ready for the next frontier, and if
+        the event queue would otherwise drain it forces them through
+        with this base implementation (which defers nothing)."""
+        if not len(ready):
+            return []
+        cap = micro_batch or len(ready)
+        order = sorted(range(len(ready)),
+                       key=lambda i: (ready[i].priority,
+                                      ready[i].deadline_t, i))
+        waves: List[List[int]] = []
+        open_by_tenant: Dict[str, List[int]] = {}
+        for i in order:
+            tenant = ready[i].tenant
+            wave = open_by_tenant.get(tenant)
+            if wave is None or len(wave) >= cap:
+                wave = []
+                waves.append(wave)
+                open_by_tenant[tenant] = wave
+            wave.append(i)
+        return waves
 
 
 def _fifo_groups(n: int, micro_batch: int) -> List[List[int]]:

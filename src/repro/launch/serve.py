@@ -9,6 +9,15 @@ dispatched exactly once (the legacy driver called ``eng.lookahead``
 manually and then the runtime prefetched again through the policy,
 double-counting H2D bytes).
 
+Decode is **asynchronous and real**: the hook returns per-request
+``DecodeEvent``s (observed steps + measured wall seconds), so each
+request's generation windows on the event clock come from the decode
+that actually ran, not the trace's static hardware estimate.  By
+default the server runs per-request continuous batching
+(``--static-groups`` restores the legacy group-granular execution):
+waves re-form at every round frontier, so a slow request's batch-mates
+move on without it and late arrivals join in-flight decode batches.
+
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
       --pipeline hyde --requests 8
 """
@@ -25,8 +34,8 @@ import jax.numpy as jnp
 import repro.core as core
 from repro.configs import get_arch
 from repro.models import transformer as tf
-from repro.serving import (EngineConfig, KVCacheManager, RagRequest,
-                           TeleRAGServer, make_traces, sample,
+from repro.serving import (DecodeEvent, EngineConfig, KVCacheManager,
+                           RagRequest, TeleRAGServer, make_traces, sample,
                            summarize_latency)
 
 
@@ -40,6 +49,9 @@ def main():
     ap.add_argument("--clusters", type=int, default=96)
     ap.add_argument("--nprobe", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--static-groups", action="store_true",
+                    help="legacy group-granular execution instead of "
+                         "per-request continuous batching")
     args = ap.parse_args()
 
     print(f"# building datastore ({args.vectors} x 192d, "
@@ -59,25 +71,39 @@ def main():
     page_bytes = index.paged.page_nbytes()
 
     def decode_hook(replica, records, gen_tokens, rnd):
-        """REAL pre-retrieval decode for this round's micro-batch — runs
-        while the round's prefetch copy (dispatched just before, once,
-        by the policy) is still in flight."""
+        """REAL pre-retrieval decode for this wave — runs while the
+        wave's prefetch copy (dispatched just before, once, by the
+        policy) is still in flight.  Returns per-request DecodeEvents:
+        the measured per-step wall time drives each member's generation
+        window on the event clock (async decode as the clock source,
+        not the trace's static estimate)."""
         n = len(records)
-        lease = kv.acquire(n, 128, fresh=True)
+        steps = min(max(gen_tokens, default=0), 32)
+        lease = kv.acquire(n, 128, fresh=True, tenant=records[0].tenant)
         tok = jnp.zeros((n,), jnp.int32)
-        for t in range(min(max(gen_tokens, default=0), 32)):
+        t0 = time.perf_counter()
+        logits = None
+        for t in range(steps):
             logits, lease.cache = step(params, lease.cache,
                                        {"token": tok,
                                         "pos": jnp.full((n,), t, jnp.int32)})
             tok = sample(logits)
+        if logits is not None:
+            jax.block_until_ready(tok)
+        per_step = (time.perf_counter() - t0) / max(steps, 1)
         kv.release(lease)
+        return [DecodeEvent(request_id=r.request_id,
+                            tokens=min(g, steps) if g else 0,
+                            seconds=per_step * (min(g, steps) if g else 0))
+                for r, g in zip(records, gen_tokens)]
 
     srv = TeleRAGServer(index, EngineConfig(
         nprobe=args.nprobe, top_k=3, buffer_pages=512,
         pool_pages=512 + -(-kv_bytes // page_bytes),
         lookahead_rank=min(2 * args.nprobe, args.clusters),
         kernel_mode="ref", cache_enabled=True, chips=4), 1, arch_full,
-        micro_batch=args.batch, include_tail=True, decode_hook=decode_hook)
+        micro_batch=args.batch, include_tail=True, decode_hook=decode_hook,
+        continuous=not args.static_groups)
     eng = srv.engines[0]
     kv = KVCacheManager(cfg, pool=eng.pool)
     eng.calibrate_tcc()

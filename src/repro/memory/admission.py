@@ -211,7 +211,11 @@ class AdmissionController:
     def park(self, key: object, npages: int,
              tenant: str = "shared") -> None:
         """Record a stalled wave (``key``) waiting for ``npages`` to
-        become free; ``tenant`` keeps the resume stats attributable."""
+        become free; ``tenant`` keeps the resume stats attributable.
+        ``key`` is opaque to the controller: the runtime parks a
+        dynamically-formed wave object (whose members re-enter the
+        ready set individually on resume) or a ``(cohort, round)``
+        tuple in never-re-form mode."""
         self.parked.append((key, int(npages), tenant))
 
     def unpark_all(self) -> List[Tuple[object, int]]:

@@ -218,6 +218,31 @@ class DevicePagePool:
         the incrementally-maintained counter."""
         return self._tenant_held.get(tenant, 0)
 
+    def tenant_bytes(self, tenant: str,
+                     owner: Optional[str] = None) -> int:
+        """Bytes of ``tenant``'s live leases, optionally filtered by
+        ledger category (``owner="kv"`` = the tenant's decode-cache
+        footprint — what ``ServerTelemetry.tenants`` surfaces)."""
+        return sum(l.nbytes for l in self.leases.values()
+                   if l.tenant == tenant
+                   and (owner is None or l.owner == owner))
+
+    def reattribute(self, lease: PageLease, tenant: str) -> PageLease:
+        """Move a live lease's tenancy (held-page counters + ledger
+        attribution) to ``tenant`` — how a recycled KV bucket's bytes
+        follow the request that reuses it instead of staying charged to
+        its first owner."""
+        if lease.lease_id not in self.leases:
+            raise KeyError(f"lease {lease.lease_id} is not live")
+        if lease.tenant == tenant:
+            return lease
+        self._bump_tenant(lease.tenant, -lease.num_pages)
+        self._bump_tenant(tenant, lease.num_pages)
+        self.ledger.credit(lease.owner, lease.nbytes, tenant=lease.tenant)
+        lease.tenant = tenant
+        self.ledger.charge(lease.owner, lease.nbytes, tenant=tenant)
+        return lease
+
     def withheld_floor_pages(self, tenant: str) -> int:
         """Pages held back from ``tenant``: the unclaimed part of every
         OTHER tenant's guaranteed floor (``max(0, floor - held)``)."""

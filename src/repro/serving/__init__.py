@@ -11,7 +11,7 @@ from repro.serving.pipelines import (GlobalBatchReport,
 from repro.serving.policies import (LatencyContext, RetrievalPolicy,
                                     get_policy, policy_names,
                                     register_policy)
-from repro.serving.runtime import (RequestRecord, RequestState,
+from repro.serving.runtime import (DecodeEvent, RequestRecord, RequestState,
                                    RetrievalRuntime, Span, latency_summary)
 from repro.serving.sampler import sample
 from repro.serving.trace import (PIPELINES, RequestTrace, StageTrace,
@@ -26,8 +26,8 @@ __all__ = [
     "PIPELINE_NAMES",
     "LatencyContext", "RetrievalPolicy", "get_policy", "policy_names",
     "register_policy",
-    "RequestRecord", "RequestState", "RetrievalRuntime", "Span",
-    "latency_summary",
+    "DecodeEvent", "RequestRecord", "RequestState", "RetrievalRuntime",
+    "Span", "latency_summary",
     "sample",
     "PIPELINES", "RequestTrace", "StageTrace", "calibration_windows",
     "make_trace", "make_traces",

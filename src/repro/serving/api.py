@@ -20,14 +20,22 @@ replica's event loop), and ``MultiReplicaOrchestrator.run_global_batch``
     replica at a time.  Open-loop throughput and latency-under-load
     (queue wait + service) are measurable for the first time.
 
-Within a replica, one micro-batch is in flight at a time (a GPU decodes
-one micro-batch's windows at a time); queued batches dispatch the
-instant the runtime drains, and ``end_batch`` consolidation runs between
-batches exactly as the legacy executor did — which is what pins the
-legacy-equivalence guarantee: for simultaneous arrivals the server
-reproduces ``run_global_batch``'s doc ids and round telemetry to 1e-6
-(tests/test_api.py).  Per-request rounds *across* micro-batches on one
-replica are the ROADMAP follow-up this API is shaped for.
+Within a replica the server runs one of two dispatch disciplines.  The
+default (``continuous=False``) keeps one micro-batch in flight at a
+time; queued batches dispatch the instant the runtime drains, and
+``end_batch`` consolidation runs between batches exactly as the legacy
+executor did — which is what pins the legacy-equivalence guarantee: for
+simultaneous arrivals the server reproduces ``run_global_batch``'s doc
+ids and round telemetry to 1e-6 (tests/test_api.py).
+
+``continuous=True`` is **per-request continuous batching inside the
+replica**: routed micro-batches are submitted into the live runtime
+immediately, the runtime's dynamic wave former
+(``SchedulerPolicy.reform_wave``) re-batches whichever requests are
+ready at every round frontier — so a straggler never delays its former
+batch-mates, new arrivals join in-flight work mid-stream, and the
+dispatcher consumes per-request *completion events* instead of batch
+drains.  See the "request lifecycle" section of docs/ARCHITECTURE.md.
 
 ``ServerTelemetry`` unifies what previously lived in four places —
 ``buffer.stats``, ``cache.hit_rate``, ``ledger.snapshot()``,
@@ -222,7 +230,9 @@ class TenantTelemetry:
     event clock; ``stall_s`` is the summed ``PRESSURE_STALLED`` time
     attributable to pool admission; the miss counters match the
     per-response ``deadline_missed`` / ``deadline_missed_in_queue``
-    flags exactly (pinned in tests/test_slo.py)."""
+    flags exactly (pinned in tests/test_slo.py).  ``kv_bytes`` is the
+    tenant's *live* decode-cache footprint summed across replica pools
+    (tenant-tagged KV leases) at snapshot time."""
 
     tenant: str
     completed: int
@@ -234,6 +244,7 @@ class TenantTelemetry:
     deadline_missed: int
     missed_in_queue: int             # deadline passed before admit_t
     demoted_rounds: int              # prefetches demoted as already-missed
+    kv_bytes: int = 0                # live KV-lease bytes across replicas
 
     @property
     def missed_in_service(self) -> int:
@@ -260,7 +271,8 @@ class TenantTelemetry:
                 f"(queue {self.missed_in_queue} / "
                 f"service {self.missed_in_service}) "
                 f"stall={self.stall_s*1e3:.1f}ms "
-                f"demoted={self.demoted_rounds}")
+                f"demoted={self.demoted_rounds} "
+                f"kv={self.kv_bytes/1e6:.2f}MB")
 
 
 @dataclass(frozen=True)
@@ -404,7 +416,7 @@ class _TenantAcc:
             self.missed += int(r.deadline_missed)
             self.missed_in_queue += int(r.deadline_missed_in_queue)
 
-    def snapshot(self, tenant: str) -> TenantTelemetry:
+    def snapshot(self, tenant: str, kv_bytes: int = 0) -> TenantTelemetry:
         lats = np.asarray(self.latencies)
         return TenantTelemetry(
             tenant=tenant, completed=self.completed,
@@ -415,7 +427,8 @@ class _TenantAcc:
             with_deadline=self.with_deadline,
             deadline_missed=self.missed,
             missed_in_queue=self.missed_in_queue,
-            demoted_rounds=self.demoted_rounds)
+            demoted_rounds=self.demoted_rounds,
+            kv_bytes=int(kv_bytes))
 
 
 class TeleRAGServer:
@@ -430,7 +443,8 @@ class TeleRAGServer:
                  include_tail: bool = False,
                  batch_window_s: float = 0.0,
                  decode_hook: Optional[Callable] = None,
-                 dispatch: Optional[DispatchPolicy] = None):
+                 dispatch: Optional[DispatchPolicy] = None,
+                 continuous: bool = False):
         """``scheduler=None`` forms FIFO micro-batches and routes them
         round-robin (persistent across waves); a ``SchedulerPolicy``
         enables the paper's similarity grouping + cache-aware routing.
@@ -439,18 +453,43 @@ class TeleRAGServer:
         (0 = every distinct arrival instant is its own wave).
         ``decode_hook(replica, records, gen_tokens, round)`` runs real
         decode inside each round frontier, after the async prefetch
-        dispatch — prefetch is dispatched exactly once, by the policy.
+        dispatch — prefetch is dispatched exactly once, by the policy;
+        it may return per-request ``DecodeEvent``s whose observed
+        timing drives the event clock in place of the modeled window.
         ``dispatch`` orders each replica's queued micro-batches; the
         default ``EdfDispatch`` runs priority classes then earliest
         deadline first, which degrades to the legacy (priority, FIFO)
-        order when no request sets a deadline."""
+        order when no request sets a deadline.
+
+        ``continuous=True`` enables per-request continuous batching
+        inside each replica: routed micro-batches are submitted into
+        the replica runtime *immediately* (no one-batch-at-a-time
+        serialization), the runtime's dynamic wave former re-batches
+        whichever requests are ready at every round frontier
+        (``SchedulerPolicy.reform_wave``, ``micro_batch``-capped,
+        tenant-pure), and the dispatcher consumes **per-request
+        completion events** instead of waiting for batch drains.
+        ``continuous=False`` (the default) keeps the legacy
+        group-granular execution that the deprecated shims are pinned
+        against: one micro-batch in flight per replica, ``end_batch``
+        consolidation between batches."""
         self.index = index
         self.cfg = cfg
+        self.continuous = bool(continuous)
         self.engines = [TeleRAGEngine(index, cfg, arch)
                         for _ in range(num_replicas)]
+        # under continuous dispatch the runtime's wave former IS the
+        # scheduler policy (its reform_wave hook); the static path keeps
+        # runtimes scheduler-free because the server already grouped
         self.runtimes = [
             RetrievalRuntime(
                 eng, include_tail=include_tail,
+                reform=self.continuous,
+                scheduler=(scheduler if self.continuous else None),
+                micro_batch=(micro_batch if self.continuous else None),
+                on_complete=((lambda rec, _r=r:
+                              self._on_request_complete(_r, rec))
+                             if self.continuous else None),
                 on_generate=(None if decode_hook is None else
                              (lambda recs, toks, rnd, _r=r:
                               decode_hook(_r, recs, toks, rnd))))
@@ -565,8 +604,11 @@ class TeleRAGServer:
             clock_s=self._global_now,
             replicas=tuple(ReplicaTelemetry.capture(i, e)
                            for i, e in enumerate(self.engines)),
-            tenants=tuple(acc.snapshot(t)
-                          for t, acc in sorted(self._tenant_acc.items())))
+            tenants=tuple(
+                acc.snapshot(t, kv_bytes=sum(
+                    e.pool.tenant_bytes(t, owner="kv")
+                    for e in self.engines))
+                for t, acc in sorted(self._tenant_acc.items())))
 
     # ---- internals ---------------------------------------------------------
     def _form_waves(self, subs: List[_Submitted],
@@ -687,32 +729,56 @@ class TeleRAGServer:
         the runtime's own clock.  "Best" is the ``DispatchPolicy``'s
         call: the default EDF order runs priority classes first and the
         earliest absolute deadline within a class (pure head-of-line
-        FIFO when nothing carries a deadline)."""
-        if self._busy[r] or not self._queues[r]:
+        FIFO when nothing carries a deadline).  Under ``continuous``
+        dispatch there is no idle gate: every queued micro-batch is
+        submitted into the (possibly mid-flight) runtime immediately —
+        its requests join waves at the next round frontier."""
+        if not self.continuous and self._busy[r]:
             return
         qr = self._queues[r]
         rt = self.runtimes[r]
-        pick = min(range(len(qr)),
-                   key=lambda i: self.dispatch.key(
-                       priority=qr[i].priority, deadline_t=qr[i].deadline_t,
-                       order=qr[i].order, now=rt.now))
-        batch = qr.pop(pick)
-        t_disp = max(batch.avail_t, rt.now)
-        for s in batch.members:
-            s.record = rt.submit(s.request.q, s.trace, arrival_t=t_disp,
-                                 tenant=s.request.tenant,
-                                 priority=s.request.priority,
-                                 deadline_t=self._deadline_abs(s))
-        rt.begin(rebase=False)
-        self._busy[r] = True
-        self._n_batches += 1
+        submitted = False
+        while qr:
+            pick = min(range(len(qr)),
+                       key=lambda i: self.dispatch.key(
+                           priority=qr[i].priority,
+                           deadline_t=qr[i].deadline_t,
+                           order=qr[i].order, now=rt.now))
+            batch = qr.pop(pick)
+            t_disp = max(batch.avail_t, rt.now)
+            for s in batch.members:
+                s.record = rt.submit(s.request.q, s.trace, arrival_t=t_disp,
+                                     tenant=s.request.tenant,
+                                     priority=s.request.priority,
+                                     deadline_t=self._deadline_abs(s))
+            submitted = True
+            self._n_batches += 1
+            if not self.continuous:
+                rt.begin(rebase=False)
+                self._busy[r] = True
+                return
+        if submitted:
+            # one begin() for everything this call queued: begin scans
+            # ALL pending submissions, so per-batch calls would push
+            # duplicate admit events (O(k^2) heap traffic per wave)
+            rt.begin(rebase=False)
+
+    def _on_request_complete(self, r: int, rec: RequestRecord) -> None:
+        """Per-request completion event from a continuous replica
+        runtime — the dispatcher's unit of progress under per-request
+        batching (the legacy path instead counts whole batch drains in
+        ``_complete_batch``)."""
+        self._n_completed += 1
 
     def _complete_batch(self, r: int) -> None:
-        """A replica drained its in-flight micro-batch: consolidate the
-        engine (end_batch, as the legacy per-group executor did) and
-        dispatch the next queued batch at the replica's clock."""
+        """A replica drained its in-flight work: consolidate the engine
+        (end_batch, as the legacy per-group executor did) and dispatch
+        the next queued batch at the replica's clock.  Under continuous
+        dispatch completions were already counted per request, so this
+        only consolidates."""
         recs = self.runtimes[r].collect()
-        self._n_completed += len(recs)
+        if not self.continuous:
+            self._n_completed += len(recs)
         self._busy[r] = False
         self._maybe_dispatch(r)
 

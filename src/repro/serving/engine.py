@@ -72,7 +72,7 @@ class EngineConfig:
 @dataclass
 class RoundTelemetry:
     round_index: int
-    batch: int
+    batch: int                        # wave size the round executed at
     gen_tokens: int
     t_llm_window: float = 0.0
     bytes_prefetched: int = 0
@@ -82,6 +82,12 @@ class RoundTelemetry:
     t_host_search: float = 0.0
     t_dev_search: float = 0.0
     t_merge: float = 0.0
+    # per-request round identity on the event clock (continuous
+    # batching: a request's rounds run in different waves, so round
+    # telemetry is keyed by request, stamped with the wave it rode)
+    wave_id: int = -1                 # dynamic wave that ran this round
+    round_start_t: float = float("nan")   # absolute event-clock round start
+    round_end_t: float = float("nan")     # absolute event-clock round end
 
     # composed stage latencies under each system's overlap semantics
     def t_telerag(self) -> float:
@@ -228,7 +234,10 @@ class TeleRAGEngine:
     def plannable_pages(self, wave_key: object = None,
                         hit_clusters: Sequence[int] = ()) -> int:
         """Pages a wave's *desired* plan may target — never a silent
-        clamp to transiently-free slots.  Plannable capacity is:
+        clamp to transiently-free slots.  ``wave_key`` identifies the
+        wave's own pins: a single pin key, or (continuous batching) a
+        tuple of the wave's per-request pin keys.  Plannable capacity
+        is:
 
           * physically free slots, plus
           * pages pinned by *other* in-flight waves (their completion

@@ -13,6 +13,13 @@ and retrieval state compete for — and are accounted against — the same
 HBM.  A recycled bucket keeps its pool lease (the bytes stay resident);
 ``acquire`` of a new bucket that the pool cannot fit raises
 ``PoolExhausted`` rather than silently overcommitting.
+
+Leases are **tenant-tagged**: ``acquire(..., tenant=...)`` charges the
+bucket's bytes to the owning request's tenant on the ledger
+(``tenant:<name>`` keys now include KV, not just prefetch pages) and in
+the pool's per-tenant occupancy; a recycled bucket is re-attributed to
+whichever tenant reuses it.  ``ServerTelemetry.tenants`` surfaces the
+per-tenant KV footprint.
 """
 
 from __future__ import annotations
@@ -31,13 +38,16 @@ from repro.models import transformer as tf
 @dataclass
 class CacheLease:
     """One leased decode cache: the JAX cache pytree plus its bucket
-    shape, exact byte footprint, and (pool-backed) page lease."""
+    shape, exact byte footprint, (pool-backed) page lease, and the
+    tenant whose requests the decode state serves (``"shared"`` = the
+    untenanted sentinel)."""
 
     cache: dict
     batch: int
     max_len: int
     nbytes: int = 0
     page_lease: Optional[PageLease] = None
+    tenant: str = "shared"
 
 
 class KVCacheManager:
@@ -57,33 +67,47 @@ class KVCacheManager:
         self._nbytes_memo: Dict[Tuple[int, int], int] = {}
 
     def acquire(self, batch: int, max_len: int, *, fresh: bool = False,
-                ) -> CacheLease:
+                tenant: str = "shared") -> CacheLease:
         """Lease a decode cache for ``batch`` sequences of ``max_len``
         (recycled bucket when available, else a fresh pool-backed
         allocation; raises ``PoolExhausted`` when the pool cannot fit
-        it).  ``fresh=True`` forces zeroed state."""
+        it).  ``fresh=True`` forces zeroed state.  ``tenant`` is the
+        owning request's tenant: the bucket's pool lease carries it, so
+        the ledger's ``tenant:<name>`` bytes (and the pool's per-tenant
+        occupancy) include KV alongside prefetch pages — a recycled
+        bucket is re-attributed to whoever reuses it."""
         key = (batch, max_len)
         nbytes = self.nbytes(batch, max_len)
         cache, page_lease = self._pool_buckets.pop(key, (None, None))
         if cache is None:
             if self.pool is not None:
-                page_lease = self.pool.lease_bytes(nbytes, "kv", tag=key)
+                page_lease = self.pool.lease_bytes(nbytes, "kv", tag=key,
+                                                   tenant=tenant)
                 if page_lease is None and self._pool_buckets:
                     # spill our own recycled buckets before giving up
                     self.drop_all()
-                    page_lease = self.pool.lease_bytes(nbytes, "kv", tag=key)
+                    page_lease = self.pool.lease_bytes(nbytes, "kv", tag=key,
+                                                       tenant=tenant)
                 if page_lease is None:
                     raise PoolExhausted(
                         f"kv cache {key} needs {nbytes} bytes; pool has "
                         f"{self.pool.reservable_pages()} reservable pages "
                         f"of {self.pool.page_nbytes} bytes")
             cache = tf.init_cache(self.cfg, batch, max_len, self.dtype)
-        elif fresh or tf.family_kind(self.cfg) != "attn":
-            # recurrent state must not leak across requests; attention
-            # caches are masked by pos so zeroing is optional
-            cache = jax.tree.map(lambda a: jnp.zeros_like(a), cache)
+        else:
+            if (page_lease is not None and self.pool is not None
+                    and page_lease.tenant != tenant):
+                # the recycled bytes now serve a different tenant — the
+                # ledger must say so, or tenant KV bytes go stale
+                self.pool.reattribute(page_lease, tenant)
+            if fresh or tf.family_kind(self.cfg) != "attn":
+                # recurrent state must not leak across requests;
+                # attention caches are masked by pos so zeroing is
+                # optional
+                cache = jax.tree.map(lambda a: jnp.zeros_like(a), cache)
         return CacheLease(cache=cache, batch=batch, max_len=max_len,
-                          nbytes=nbytes, page_lease=page_lease)
+                          nbytes=nbytes, page_lease=page_lease,
+                          tenant=tenant)
 
     def release(self, lease: CacheLease) -> None:
         """Return the bucket for recycling (its pool lease stays live:

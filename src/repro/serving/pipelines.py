@@ -2,8 +2,10 @@
 front-end in ``serving/api.py``.
 
 ``PipelineExecutor`` admits a whole micro-batch at t=0 into an
-event-driven ``RetrievalRuntime`` and drains it — byte-identical results
-to the pre-runtime lockstep loop.
+event-driven ``RetrievalRuntime`` running in the degenerate
+*never-re-form* mode (``reform=False``: the admission group stays the
+wave for every round) and drains it — byte-identical results to the
+pre-runtime lockstep loop.
 
 ``MultiReplicaOrchestrator.run_global_batch`` routes through
 ``TeleRAGServer``: one simultaneous-arrival wave, grouped and routed by
@@ -46,7 +48,9 @@ class PipelineExecutor:
             "(repro.serving.api) — same machinery, typed "
             "request/response lifecycle", DeprecationWarning, stacklevel=2)
         self.engine = engine
-        self.runtime = RetrievalRuntime(engine)
+        # never-re-form mode: the admission group stays the wave for
+        # every round, which pins the legacy lockstep results exactly
+        self.runtime = RetrievalRuntime(engine, reform=False)
         self.last_records: List[RequestRecord] = []
 
     def execute_batch(self, q_in: np.ndarray, traces: Sequence[RequestTrace],

@@ -65,7 +65,11 @@ class RetrievalPolicy:
         """The *desired* lookahead plan (what the wave wants to reserve),
         computed against the pool's full extent — transient pressure is
         the admission controller's problem, not the planner's.  None for
-        non-prefetching policies."""
+        non-prefetching policies.  ``wave_key`` identifies the wave's
+        own buffer pins so the plan never counts them as reclaimable:
+        under per-request continuous batching it is the tuple of the
+        wave's member records (pins are keyed per request and released
+        at each request's own completion), not a wave id."""
         return None
 
     def lookahead(self, engine: "TeleRAGEngine", q_in: np.ndarray,

@@ -1,40 +1,63 @@
-"""Event-driven retrieval runtime: continuous batching over a priority
-event queue (§4.1/§4.2 made operational).
+"""Event-driven retrieval runtime: per-request continuous batching over
+a priority event queue (§4.1/§4.2 made operational).
 
 Replaces the lockstep ``execute_batch`` loop.  Requests are **admitted**
-at arrival time, grouped into micro-batches by a ``SchedulerPolicy``, and
-walked through a per-request state machine
+at arrival time and walked through a per-request state machine
 
     QUEUED -> ADMITTED -> PREFETCHING -> GENERATING -> RETRIEVING
-           -> (next round | COMPLETE)
+           ->  (ready: next round | COMPLETE)
                   |  ^
                   v  | page-free event
            PRESSURE_STALLED
 
 driven by a min-heap of timestamped events on a modeled wall clock.
-A round frontier first *reserves* its lookahead plan's page headroom
+
+Execution is **wave-formed**: there is no static batch.  Whenever one
+or more requests become *ready* (admitted, resumed from a pressure
+park, or finishing a retrieval round), a **round frontier** fires and
+the dynamic wave former re-batches whichever requests are ready *right
+now* — same replica, tenant-pure, honoring the ``micro_batch`` cap —
+into fresh micro-batches (``_Wave``s).  A slow request therefore never
+drags its former batch-mates: they re-form into new waves the moment
+their own rounds end, newly admitted requests join mid-stream, and a
+request parked ``PRESSURE_STALLED`` rejoins whatever wave forms at its
+wake-up.  Wave membership (and therefore the decode batch size each
+generation window is modeled at) reflects who is *actually* decoding
+together.  ``SchedulerPolicy.reform_wave`` owns the ordering (default:
+EDF within priority classes, FIFO among equals).
+
+Per-request bookkeeping is keyed by the request, not the wave: buffer
+pins (a request's working set stays pinned until *its* completion
+event), admission parking, and round telemetry (``RoundTelemetry``
+carries ``wave_id`` / ``round_start_t`` / ``round_end_t``) all hang off
+``RequestRecord``.  Admission reservations are aggregated per wave (one
+ticket covers the wave's batched lookahead plan) but park and resume
+per request.
+
+Decode can be **real and asynchronous**: the ``on_generate`` hook runs
+actual device decode inside the round frontier (the prefetch copy
+dispatched just before it is genuinely in flight underneath) and may
+return per-request ``DecodeEvent``s — observed decode steps whose
+measured seconds then *drive the event clock* in place of the trace's
+static ``llm_window_seconds`` estimate.
+
+A round frontier first *reserves* the wave's lookahead page headroom
 with the engine's ``AdmissionController``; when the shared
-``DevicePagePool`` cannot promise the pages, the wave parks
-``PRESSURE_STALLED`` and resumes on the page-free event of a completing
-wave's pin release — the planner never silently truncates its plan.
+``DevicePagePool`` cannot promise the pages, the wave's members park
+``PRESSURE_STALLED`` and resume on the page-free event of a completing
+request's pin release — the planner never silently truncates its plan.
 Prefetch copies are ``TransferEvent``s on the engine's double-buffered
-link, so overlap between a transfer and a generation window is a fact of
-the event timeline (two intersecting intervals), not a ``max()``.
+link, so overlap between a transfer and a generation window is a fact
+of the event timeline (two intersecting intervals), not a ``max()``.
 
-Execution semantics:
-
-  * Engine *data* operations (lookahead planning, device/host search,
-    cache updates) run at **group granularity** when the group's round
-    frontier fires — byte-for-byte the same operations, order, and RNG
-    stream as the legacy executor, so retrieval results and telemetry
-    are identical.
-  * The *clock* is tracked **per request**: each request's round r
-    starts when its own round r-1 finished; its retrieval waits on the
-    later of its generation window and its view of the shared transfer
-    (``TransferEngine.ready_t``).  For a static batch this reproduces
-    the legacy ``RoundTelemetry`` composition to 1e-6
-    (tests/test_runtime.py), while staggered arrivals yield transfers
-    genuinely in flight during other requests' generation windows.
+**Never-re-form mode** (``reform=False``): the degenerate setting runs
+the same wave executor on *static cohorts* — the request's admission
+group is its wave for every round, frontiers fire at the cohort's
+earliest finisher, and each member keeps its own round start — which
+reproduces the legacy group-granular executor bit-for-bit (doc ids
+exact, telemetry to 1e-6; pinned by tests/test_runtime.py and
+tests/test_api.py).  ``PipelineExecutor`` and ``run_global_batch`` run
+in this mode.
 
 A request's admit→complete latency is read off the event clock
 (``RequestRecord.latency``), which is what the serve drivers report.
@@ -60,7 +83,7 @@ from repro.serving.trace import RequestTrace
 
 class RequestState(str, Enum):
     QUEUED = "queued"
-    ADMITTED = "admitted"
+    ADMITTED = "admitted"                   # ready: waiting for a wave
     PRESSURE_STALLED = "pressure_stalled"   # parked: pool reservation failed
     PREFETCHING = "prefetching"
     GENERATING = "generating"
@@ -82,14 +105,43 @@ class Span:
         return self.start < hi and lo < self.end
 
 
+@dataclass(frozen=True)
+class DecodeEvent:
+    """One request's *observed* decode outcome for a generation window.
+
+    The ``on_generate`` hook returns one per wave member when it runs
+    real decode: ``tokens`` steps were actually executed in ``seconds``
+    of measured wall clock.  The runtime then models the member's full
+    generation window from the observed per-step rate instead of the
+    trace's static hardware estimate — real decode drives the event
+    clock."""
+
+    request_id: int
+    tokens: int                   # decode steps actually executed
+    seconds: float                # measured wall-clock for those steps
+
+    def window(self, gen_tokens: int) -> float:
+        """Seconds for a ``gen_tokens``-step window at the observed
+        per-step rate (``seconds`` verbatim when no steps ran)."""
+        if self.tokens <= 0:
+            return float(self.seconds)
+        return float(self.seconds) * (gen_tokens / self.tokens)
+
+
 @dataclass(eq=False)                   # identity semantics: records are
 class RequestRecord:                   # live state, and `q` is an ndarray
     """One request's live serving state on a replica runtime: identity,
     event-clock timestamps (seconds), state-machine position, and the
-    span timeline the telemetry layer reads.  ``deadline_t`` is the
-    request's *absolute* deadline on the shared event clock (``inf`` =
-    no SLO); ``tenant``/``priority`` carry the SLO identity the
-    dispatcher and admission control act on."""
+    span timeline the telemetry layer reads.
+
+    The record IS the unit of execution: ``plan`` (its retrieval round
+    shapes), ``cur_q`` (its drifting query), ``next_round`` and
+    ``ready_t`` (when its next round may start) make it independently
+    schedulable, and buffer pins / admission parking are keyed by the
+    record itself.  ``deadline_t`` is the request's *absolute* deadline
+    on the shared event clock (``inf`` = no SLO); ``tenant`` /
+    ``priority`` carry the SLO identity the wave former and admission
+    control act on."""
 
     request_id: int
     pipeline: str
@@ -106,6 +158,11 @@ class RequestRecord:                   # live state, and `q` is an ndarray
     priority: int = 0
     deadline_t: float = float("inf")
     demoted_rounds: int = 0            # rounds whose prefetch was demoted
+    # per-request round machine (populated at admit)
+    plan: List[Tuple[int, int]] = field(default_factory=list)
+    cur_q: Optional[np.ndarray] = None
+    next_round: int = 0
+    ready_t: float = float("nan")
 
     @property
     def latency(self) -> float:
@@ -146,26 +203,49 @@ def round_plan(trace: RequestTrace) -> List[Tuple[int, int]]:
 
 
 def tail_gen_tokens(trace: RequestTrace) -> int:
-    """Generation after the last retrieval (counts once per request)."""
+    """Generation after the last retrieval (counts once per request;
+    for a decode-only trace this is the whole trace)."""
     acc = 0
     for s in trace.stages:
         acc = 0 if s.kind == "retrieve" else acc + s.gen_tokens
     return acc
 
 
-@dataclass
-class _Group:
+@dataclass(eq=False)
+class _Cohort:
+    """Never-re-form mode's static admission group: its members stay
+    wave-mates for every round (the legacy ``_Group`` semantics)."""
+
     gid: int
     members: List[RequestRecord]
-    plans: List[List[Tuple[int, int]]]
-    cur_q: np.ndarray                        # [B, d], drifts per round
     scheduled_rounds: set = field(default_factory=set)
-    remaining: int = 0                       # members not yet COMPLETE
-    tenant: str = "shared"                   # admission/ledger attribution
+
+
+@dataclass(eq=False)
+class _Wave:
+    """One dynamically-formed micro-batch: the requests executing a
+    round frontier together (mixed ``rounds`` indices are normal — a
+    mid-stream admit's round 0 batches with a veteran's round 2)."""
+
+    wid: int
+    t: float                              # frontier clock time
+    members: List[RequestRecord]
+    rounds: List[int]                     # per-member round index
+    tenant: str = "shared"
+
+    @property
+    def request_ids(self) -> Tuple[int, ...]:
+        """Member request ids (telemetry / test introspection)."""
+        return tuple(m.request_id for m in self.members)
+
+
+# forced frontiers fall back to this former: it places EVERY ready
+# request, so a custom policy that keeps deferring cannot stall a drain
+_BASE_FORMER = SchedulerPolicy()
 
 
 class RetrievalRuntime:
-    """Continuous-batching executor for one engine replica."""
+    """Per-request continuous-batching executor for one engine replica."""
 
     def __init__(self, engine: TeleRAGEngine, *,
                  scheduler: Optional[SchedulerPolicy] = None,
@@ -174,29 +254,51 @@ class RetrievalRuntime:
                  include_tail: bool = False,
                  on_generate: Optional[Callable[[List["RequestRecord"],
                                                  List[int], int],
+                                                Optional[Sequence[
+                                                    DecodeEvent]]]] = None,
+                 reform: bool = True,
+                 on_complete: Optional[Callable[["RequestRecord"],
                                                 None]] = None):
+        """``reform=True`` (the default) runs the dynamic wave former:
+        every round frontier re-batches the currently-ready requests.
+        ``reform=False`` is the degenerate never-re-form mode — the
+        admission group is the wave for every round — which reproduces
+        the legacy group-granular executor exactly (the deprecated
+        shims run in this mode).  ``on_generate`` is the decode hook:
+        called once per wave frontier, right after the async prefetch
+        dispatch, with the wave's records and their generation-window
+        token counts; serve drivers run REAL decode here (the copy is
+        genuinely in flight underneath) and may return per-request
+        ``DecodeEvent``s whose observed timing replaces the modeled
+        generation window on the event clock.  ``on_complete`` fires at
+        each request's completion event (the server's continuous
+        dispatcher consumes these instead of waiting for batch
+        drains)."""
         self.engine = engine
         self.scheduler = scheduler
         self.micro_batch = micro_batch
         self._ctx = ctx
         self.include_tail = include_tail
-        # decode hook: called once per round frontier, right after the
-        # async prefetch dispatch, with the active records and their
-        # generation-window token counts — serve drivers run REAL decode
-        # here so the copy is genuinely in flight underneath it (and the
-        # prefetch is dispatched exactly once, by the policy)
         self.on_generate = on_generate
+        self.on_complete = on_complete
+        self.reform = reform
+        # the wave former: the scheduler policy when given (its
+        # reform_wave hook), else the base EDF/tenant-aware default
+        self._former = scheduler if scheduler is not None \
+            else SchedulerPolicy()
         self._rng = np.random.default_rng(engine.cfg.seed + 1)
         self._now = 0.0                      # drained clock across run()s
         self._seq = itertools.count()
         self._gid = itertools.count()
+        self._wid = itertools.count()
         self._heap: List[Tuple[float, int, str, tuple]] = []
         self._pending: List[RequestRecord] = []
         self._batch: List[RequestRecord] = []
-        self._group_of: Dict[int, _Group] = {}     # id(record) -> group
+        self._ready: List[RequestRecord] = []
         self._retry_scheduled = False
         self.event_log: List[Tuple[float, str, int]] = []
-        # page-free events wake PRESSURE_STALLED waves
+        self.wave_log: List[_Wave] = []
+        # page-free events wake PRESSURE_STALLED requests
         engine.pool.subscribe(self._on_pages_freed)
 
     @property
@@ -253,15 +355,17 @@ class RetrievalRuntime:
             self._push(t, "admit", ())
 
     def has_work(self) -> bool:
-        """True while events remain or waves are parked on pressure."""
-        return bool(self._heap) or bool(self.engine.admission.parked)
+        """True while events remain, requests are ready for a wave, or
+        requests are parked on pressure."""
+        return (bool(self._heap) or bool(self._ready)
+                or bool(self.engine.admission.parked))
 
     def next_event_t(self) -> Optional[float]:
         """Clock time of the next event this runtime would process (the
         server's merge key across replicas); None when drained."""
         if self._heap:
             return self._heap[0][0]
-        if self.engine.admission.parked:
+        if self._ready or self.engine.admission.parked:
             return self._now
         return None
 
@@ -270,7 +374,12 @@ class RetrievalRuntime:
         ``TeleRAGServer`` interleaves replicas by always stepping the
         runtime with the globally-earliest ``next_event_t``."""
         if not self._heap:
-            # every waker has fired and waves are still parked (the
+            if self._ready:
+                # a custom former deferred requests and nothing else is
+                # coming: force a frontier so the drain terminates
+                self._on_frontier(True, now=self._now)
+                return self._now
+            # every waker has fired and requests are still parked (the
             # pressure came from holders outside the event loop, e.g.
             # recycled KV buckets): force a capped admission so the
             # drain terminates — the shortfall lands on admission
@@ -283,6 +392,10 @@ class RetrievalRuntime:
             self._on_admit(t)
         elif kind == "round":
             self._on_round(*payload, now=t)
+        elif kind == "frontier":
+            self._on_frontier(*payload, now=t)
+        elif kind == "ready":
+            self._on_ready(*payload, now=t)
         elif kind == "retry":
             self._retry_scheduled = False
             self._retry_parked(t)
@@ -310,12 +423,36 @@ class RetrievalRuntime:
             self.step()
         return self.collect()
 
-    # ---- handlers ----------------------------------------------------------
+    # ---- admission of arrivals ---------------------------------------------
+    def _admit_record(self, m: RequestRecord, now: float) -> None:
+        """Common per-request admission bookkeeping (both modes)."""
+        m.admit_t = now
+        m.state = RequestState.ADMITTED
+        m.plan = round_plan(m.trace)
+        m.cur_q = np.array(m.q, copy=True)
+        m.next_round = 0
+        m.ready_t = now
+        m.round_start = [now] + [float("nan")] * max(0, len(m.plan) - 1)
+        m.timeline.append(Span("admit", now, now))
+        self.event_log.append((now, "admit", m.request_id))
+
     def _on_admit(self, now: float) -> None:
         ready = [r for r in self._pending if r.arrival_t <= now + 1e-12]
         if not ready:
             return
         self._pending = [r for r in self._pending if r not in ready]
+        if self.reform:
+            # per-request admission: every arrival is individually ready
+            # and joins whatever wave the next frontier forms (mid-stream
+            # admission into an in-flight replica is the normal path —
+            # decode-only requests included)
+            for m in ready:
+                self._admit_record(m, now)
+            self._ready.extend(ready)
+            self._push(now, "frontier", (False,))
+            return
+        # never-re-form mode: the admission group IS the wave for every
+        # round (legacy semantics, pinned equivalent)
         q = np.stack([r.q for r in ready])
         if self.scheduler is None:
             groups_idx = [list(range(len(ready)))]
@@ -324,153 +461,305 @@ class RetrievalRuntime:
                 q, self.micro_batch or len(ready))
         for gi in groups_idx:
             members = [ready[i] for i in gi]
-            plans = [round_plan(m.trace) for m in members]
-            g = _Group(gid=next(self._gid), members=members, plans=plans,
-                       cur_q=np.stack([m.q for m in members]).copy(),
-                       tenant=members[0].tenant)
-            for m, p in zip(members, plans):
-                m.admit_t = now
-                m.state = RequestState.ADMITTED
-                m.round_start = [now] + [float("nan")] * (len(p) - 1)
-                m.timeline.append(Span("admit", now, now))
-                self.event_log.append((now, "admit", m.request_id))
-                if not p:                    # trace with no retrieval round
-                    m.complete_t = now
-                    m.state = RequestState.COMPLETE
-                    m.timeline.append(Span("complete", now, now))
-                else:
-                    g.remaining += 1
-                    self._group_of[id(m)] = g
-            g.scheduled_rounds.add(0)
-            self._push(now, "round", (g, 0))
+            for m in members:
+                self._admit_record(m, now)
+            # decode-only traces ride the normal per-request path as
+            # tail-only singleton waves (no special-case completion)
+            with_rounds = [m for m in members if m.plan]
+            for m in members:
+                if not m.plan:
+                    self._exec_wave(
+                        _Wave(wid=next(self._wid), t=now, members=[m],
+                              rounds=[0], tenant=m.tenant),
+                        now=now, starts=[now])
+            if with_rounds:
+                g = _Cohort(gid=next(self._gid), members=with_rounds)
+                g.scheduled_rounds.add(0)
+                self._push(now, "round", (g, 0))
 
-    def _on_round(self, g: _Group, rnd: int, force: bool = False, *,
+    # ---- frontiers ---------------------------------------------------------
+    def _on_round(self, g: _Cohort, rnd: int, force: bool = False, *,
                   now: float) -> None:
-        """Group round frontier: reserve the round's pool headroom (or
-        park PRESSURE_STALLED), then run the engine data ops for every
-        member still active in round ``rnd`` and schedule each member's
-        per-request events from its own round-start."""
+        """Never-re-form frontier: the cohort's active members execute
+        round ``rnd`` as one wave, each from its own round start."""
+        members = [m for m in g.members if rnd < len(m.plan)]
+        if not members:
+            return
+        wave = _Wave(wid=next(self._wid), t=now, members=members,
+                     rounds=[rnd] * len(members), tenant=members[0].tenant)
+        self._exec_wave(wave, now=now,
+                        starts=[m.round_start[rnd] for m in members],
+                        force=force, cohort=g)
+
+    def _on_frontier(self, force: bool = False, *, now: float) -> None:
+        """Dynamic round frontier: re-batch whichever requests are ready
+        *now* into fresh waves (the former orders/partitions; members a
+        custom former defers stay ready for the next frontier).  A
+        *forced* frontier (the event queue would otherwise drain) uses
+        the base former, which places every ready request — a custom
+        former that keeps deferring cannot livelock the drain."""
+        ready = [r for r in self._ready
+                 if r.state == RequestState.ADMITTED]
+        self._ready = []
+        if not ready:
+            return
+        former = _BASE_FORMER if force else self._former
+        waves_idx = former.reform_wave(ready,
+                                       micro_batch=self.micro_batch,
+                                       now=now)
+        placed = set()
+        for wi in waves_idx:
+            members = [ready[i] for i in wi]
+            placed.update(wi)
+            wave = _Wave(wid=next(self._wid), t=now, members=members,
+                         rounds=[m.next_round for m in members],
+                         tenant=members[0].tenant)
+            self._exec_wave(wave, now=now, starts=[now] * len(members),
+                            force=force)
+        self._ready.extend(r for i, r in enumerate(ready)
+                           if i not in placed)
+
+    def _on_ready(self, rec: RequestRecord, *, now: float) -> None:
+        """A request's round ended: it is ready for the next frontier."""
+        if rec.state in (RequestState.COMPLETE,
+                         RequestState.PRESSURE_STALLED):
+            return
+        rec.state = RequestState.ADMITTED
+        rec.ready_t = now
+        self._ready.append(rec)
+        self._push(now, "frontier", (False,))
+
+    # ---- the wave executor -------------------------------------------------
+    @staticmethod
+    def _member_cluster_sets(plan, n_members: int, *, wave_level: bool,
+                             ) -> Tuple[List[List[int]], List[List[int]]]:
+        """Per-member (resident-hit, fetch) cluster lists for pinning.
+        ``wave_level=True`` (never-re-form mode) gives every member the
+        wave's full sets — the legacy release timing, where a shared
+        working set frees only when the LAST group member completes.
+        Otherwise each member gets the clusters its own ranked row
+        contributed, so its exclusive pages free at its own completion."""
+        if wave_level or plan.ranked is None:
+            return ([list(plan.resident_hits)] * n_members,
+                    [list(plan.fetch)] * n_members)
+        hits_all = set(map(int, plan.resident_hits))
+        fetch_all = set(map(int, plan.fetch))
+        hit_sets, fetch_sets = [], []
+        for k in range(n_members):
+            row = set(map(int, plan.ranked[k]))
+            hit_sets.append(sorted(row & hits_all))
+            fetch_sets.append(sorted(row & fetch_all))
+        return hit_sets, fetch_sets
+
+    def _exec_wave(self, wave: _Wave, *, now: float,
+                   starts: Sequence[float], force: bool = False,
+                   cohort: Optional[_Cohort] = None) -> None:
+        """Execute one wave's round frontier: reserve the wave's pool
+        headroom (or park its members ``PRESSURE_STALLED``), run the
+        engine data ops for the whole wave, and schedule each member's
+        per-request events from its own round start.  ``starts`` is the
+        per-member round start (== ``now`` for dynamically formed
+        waves; the member's own round clock in never-re-form mode,
+        where a cohort frontier fires at its earliest finisher)."""
         eng = self.engine
         policy = eng.policy
-        active = [i for i in range(len(g.members))
-                  if rnd < len(g.plans[i])]
-        if not active:
-            return
-        batch = len(active)
-        gen_tokens = [g.plans[i][rnd][0] for i in active]
-        act_q = g.cur_q[active]
+        members, rounds = wave.members, wave.rounds
+        batch = len(members)
+        # members still retrieving vs. decode-only / tail-only members
+        ret = [j for j in range(batch) if rounds[j] < len(members[j].plan)]
+        gen_tokens = [
+            members[j].plan[rounds[j]][0] if rounds[j] < len(members[j].plan)
+            else (tail_gen_tokens(members[j].trace)
+                  if self.include_tail else 0)
+            for j in range(batch)]
 
-        # 0a) slack-based demotion: a round whose every active member is
-        #     already past its deadline cannot make its SLO no matter
+        # 0a) slack-based demotion: a round whose every retrieving member
+        #     is already past its deadline cannot make its SLO no matter
         #     how fast retrieval runs — spending pool pages and link
         #     bandwidth on its lookahead only starves requests that CAN
         #     still meet theirs.  The round executes (misses go to host
         #     search) but its prefetch is demoted to nothing.
-        demoted = (policy.prefetches and bool(active)
-                   and all(now > g.members[i].deadline_t + 1e-12
-                           for i in active))
+        demoted = (policy.prefetches and bool(ret)
+                   and all(now > members[j].deadline_t + 1e-12
+                           for j in ret))
         if demoted:
-            for i in active:
-                req = g.members[i]
+            for j in ret:
+                req = members[j]
                 req.demoted_rounds += 1
                 self.event_log.append((now, "prefetch_demoted",
                                        req.request_id))
 
         # 0) admission: the wave's lookahead plan reserves its headroom
-        #    up front; if the pool cannot promise the pages, the whole
-        #    round parks and resumes on a page-free event — the planner
-        #    never silently truncates under someone else's pressure
+        #    up front (ONE reservation aggregated over the wave); if the
+        #    pool cannot promise the pages, every member parks and
+        #    resumes on a page-free event — the planner never silently
+        #    truncates under someone else's pressure.  Pins are keyed
+        #    per REQUEST: each member holds the wave's working set until
+        #    its own completion event.
         plan = ticket = None
-        if policy.prefetches and not demoted:
-            plan = eng.plan_lookahead(act_q, gen_tokens, wave_key=g.gid)
+        act_q = None
+        keys = tuple(members[j] for j in ret)
+        if ret:
+            act_q = np.stack([members[j].cur_q for j in ret])
+        if ret and policy.prefetches and not demoted:
+            plan = eng.plan_lookahead(act_q, [gen_tokens[j] for j in ret],
+                                      wave_key=keys)
+            # per-request working sets: in reform mode each member pins
+            # only the clusters ITS OWN ranked row needs, so a finished
+            # request's exclusive pages free immediately instead of
+            # waiting for the whole wave (never-re-form mode keeps
+            # wave-level sets — the legacy group release timing)
+            hit_sets, fetch_sets = self._member_cluster_sets(
+                plan, len(ret), wave_level=cohort is not None)
             # pin the plan's resident hits BEFORE admission: the spill
             # that makes room for this wave's reservation must not evict
             # the clusters the plan counts on finding on-device
-            hit_pins = eng.buffer.pin_clusters(g.gid, plan.resident_hits)
+            hit_pins = [eng.buffer.pin_clusters(m, cs)
+                        for m, cs in zip(keys, hit_sets)]
             # stalling is only sound if someone ELSE will free pages —
             # the wave's own pins must not make it wait on itself
-            waitable = (eng.buffer.pages_pinned_by_others(g.gid) > 0
+            waitable = (eng.buffer.pages_pinned_by_others(keys) > 0
                         or bool(eng.pool.reservations)
                         or any(l.owner != "prefetch"
                                for l in eng.pool.leases.values()))
             ticket = eng.admission.admit(plan.pages_planned,
-                                         owner=f"g{g.gid}r{rnd}",
+                                         owner=f"w{wave.wid}",
                                          can_wait=waitable and not force,
-                                         tenant=g.tenant)
+                                         tenant=wave.tenant)
             if ticket is None:
                 # a parked wave holds nothing: keeping tentative hit pins
                 # would make other parked waves mutually wait on them —
                 # the plan is recomputed from scratch on resume anyway
-                eng.buffer.release_pins(g.gid, hit_pins)
-                eng.admission.park((g, rnd), plan.pages_planned,
-                                   tenant=g.tenant)
-                for i in active:
-                    req = g.members[i]
+                for m, pins in zip(keys, hit_pins):
+                    eng.buffer.release_pins(m, pins)
+                eng.admission.park(
+                    (cohort, rounds[0]) if cohort is not None else wave,
+                    plan.pages_planned, tenant=wave.tenant)
+                for j in ret:
+                    req = members[j]
                     req.state = RequestState.PRESSURE_STALLED
                     self.event_log.append((now, "pressure_stall",
                                            req.request_id))
+                # decode-only wave-mates need no pool pages: they must
+                # not be swallowed by the park — run them as their own
+                # wave right now (only dynamic waves mix tail members)
+                tails = [j for j in range(batch) if j not in set(ret)]
+                if tails:
+                    self._exec_wave(
+                        _Wave(wid=next(self._wid), t=now,
+                              members=[members[j] for j in tails],
+                              rounds=[rounds[j] for j in tails],
+                              tenant=wave.tenant),
+                        now=now, starts=[starts[j] for j in tails])
                 return
 
-        # 1) lookahead prefetch keyed on the *current* query, dispatched
+        # the wave is logged only once it actually executes — a parked
+        # wave dissolves and its members are re-logged with the wave
+        # they eventually ride
+        self.wave_log.append(wave)
+
+        # 1) lookahead prefetch keyed on the *current* queries, dispatched
         #    (async) at the frontier — in flight during generation.  A
         #    demoted round moves nothing (it only flushes any queued
         #    device invalidations so the search LUT stays consistent).
-        if demoted:
-            nbytes, nfetch, ev = 0, 0, None
-            eng.buffer.flush_invalidations()
-        else:
-            nbytes, nfetch, ev = eng.lookahead_ex(act_q, gen_tokens, now=now,
-                                                  plan=plan, ticket=ticket)
+        nbytes, nfetch, ev = 0, 0, None
+        if ret and policy.prefetches:
+            if demoted:
+                eng.buffer.flush_invalidations()
+            else:
+                nbytes, nfetch, ev = eng.lookahead_ex(
+                    act_q, [gen_tokens[j] for j in ret], now=now,
+                    plan=plan, ticket=ticket)
         if plan is not None:
-            # the wave owns its fetched set too until its completion event
-            eng.buffer.pin_clusters(g.gid, plan.fetch)
+            # each member owns its share of the fetched set too, until
+            # its own completion event
+            for m, cs in zip(keys, fetch_sets):
+                eng.buffer.pin_clusters(m, cs)
 
         # 1b) real decode (serve drivers): the copy dispatched above is
-        #     in flight while the hook's device steps run
-        if self.on_generate is not None:
-            self.on_generate([g.members[i] for i in active], gen_tokens,
-                             rnd)
+        #     in flight while the hook's device steps run; observed
+        #     per-request DecodeEvents replace the modeled windows
+        decode_evs: Optional[List[DecodeEvent]] = None
+        if self.on_generate is not None and (ret or any(gen_tokens)):
+            evs = self.on_generate(list(members), list(gen_tokens),
+                                   rounds[0])
+            if evs is not None:
+                if len(evs) != batch:
+                    raise ValueError(
+                        f"decode hook returned {len(evs)} events for a "
+                        f"wave of {batch}")
+                # match by request id, not position: a hook returning
+                # events in any order must not cross-wire the windows
+                by_id = {e.request_id: e for e in evs}
+                if len(by_id) != batch or any(m.request_id not in by_id
+                                              for m in members):
+                    raise ValueError(
+                        "decode events must carry exactly the wave "
+                        "members' request ids")
+                decode_evs = [by_id[m.request_id] for m in members]
 
         # 2) rewrite -> q_out (SubQ expands to num_queries rewrites)
-        q_out_rows: List[np.ndarray] = []
+        res = None
         owners: List[int] = []
-        for j, i in enumerate(active):
-            sigma = g.members[i].trace.rewrite_sigma
-            nq = g.plans[i][rnd][1]
-            for _ in range(nq):
-                q_out_rows.append(
-                    synthetic_rewrite(act_q[j][None, :], sigma,
-                                      self._rng)[0]
-                    if sigma > 0 else act_q[j])
-                owners.append(i)
-        q_out = np.stack(q_out_rows)
+        q_out = None
+        if ret:
+            q_out_rows: List[np.ndarray] = []
+            for k, j in enumerate(ret):
+                sigma = members[j].trace.rewrite_sigma
+                nq = members[j].plan[rounds[j]][1]
+                for _ in range(nq):
+                    q_out_rows.append(
+                        synthetic_rewrite(act_q[k][None, :], sigma,
+                                          self._rng)[0]
+                        if sigma > 0 else act_q[k])
+                    owners.append(j)
+            q_out = np.stack(q_out_rows)
 
-        # 3) hybrid retrieval (device hits + host misses + merge)
-        res = eng.retrieve(q_out, now=now, tenant=g.tenant)
+            # 3) hybrid retrieval (device hits + host misses + merge)
+            res = eng.retrieve(q_out, now=now, tenant=wave.tenant)
 
         # 4) per-request telemetry + event-clock scheduling
         t_transfer = nbytes / eng.cfg.hw.host_link_bw
         mean_pages = float(np.mean(eng.index.paged.cluster_num_pages))
         continuing: List[float] = []
-        for j, i in enumerate(active):
-            req = g.members[i]
-            rows = [r for r, o in enumerate(owners) if o == i]
+        for j in range(batch):
+            req, rnd, rs = members[j], rounds[j], starts[j]
+            win = eng.llm_window_seconds(gen_tokens[j], batch)
+            if decode_evs is not None and decode_evs[j].tokens > 0:
+                # an event with no observed steps (the hook had nothing
+                # to decode for this member) keeps the modeled window
+                win = decode_evs[j].window(gen_tokens[j])
+            if j not in ret:
+                # decode-only / tail-only member: its "round" is one
+                # generation window, then completion — the same wave
+                # machinery, no special-case branch
+                if win > 0:
+                    req.timeline.append(Span("generate_tail", rs, rs + win))
+                    self._push(rs, "mark", (req, RequestState.GENERATING,
+                                            "generate"))
+                req.complete_t = rs + win
+                req.timeline.append(
+                    Span("complete", req.complete_t, req.complete_t))
+                self._push(req.complete_t, "mark",
+                           (req, RequestState.COMPLETE, "complete"))
+                continue
+            rows = [r for r, o in enumerate(owners) if o == j]
             hits = sum(len(res.hit_clusters[r]) for r in rows)
             misses = sum(len(res.missed_clusters[r]) for r in rows)
             rt = RoundTelemetry(
                 round_index=rnd, batch=batch, gen_tokens=gen_tokens[j],
-                t_llm_window=eng.llm_window_seconds(gen_tokens[j], batch),
-                bytes_prefetched=nbytes // max(batch, 1),
+                t_llm_window=win,
+                bytes_prefetched=nbytes // max(len(ret), 1),
                 t_prefetch=t_transfer,
                 hits=hits, misses=misses,
                 t_host_search=misses * eng.effective_tcc(),
                 t_dev_search=eng._dev_search_seconds(
                     int(hits * mean_pages)),
-                t_merge=2e-5)
+                t_merge=2e-5,
+                wave_id=wave.wid, round_start_t=rs)
             req.result.rounds.append(rt)
             req.result.doc_ids.extend(res.doc_ids[r] for r in rows)
 
-            rs = req.round_start[rnd]
             gen_end = rs + rt.t_llm_window
             ready = None
             if policy.prefetches and ev is not None:
@@ -478,6 +767,7 @@ class RetrievalRuntime:
             retrieve_start = (gen_end if ready is None
                               else max(gen_end, ready))
             round_end = retrieve_start + policy.search_seconds(rt, self.ctx)
+            rt.round_end_t = round_end
 
             if policy.prefetches and not demoted:
                 req.timeline.append(Span("prefetch_dispatch", rs, rs, rnd))
@@ -493,14 +783,22 @@ class RetrievalRuntime:
             self._push(retrieve_start, "mark",
                        (req, RequestState.RETRIEVING, "retrieve"))
 
-            if rnd + 1 < len(g.plans[i]):
+            req.next_round = rnd + 1
+            if rnd + 1 < len(req.plan):
                 req.round_start[rnd + 1] = round_end
-                continuing.append(round_end)
+                req.ready_t = round_end
+                if cohort is not None:
+                    continuing.append(round_end)
+                else:
+                    self._push(round_end, "ready", (req,))
             else:
                 complete_t = round_end
                 if self.include_tail:
                     tail_s = eng.llm_window_seconds(
                         tail_gen_tokens(req.trace), batch)
+                    if decode_evs is not None and decode_evs[j].tokens > 0:
+                        tail_s = decode_evs[j].window(
+                            tail_gen_tokens(req.trace))
                     if tail_s > 0:
                         req.timeline.append(
                             Span("generate_tail", round_end,
@@ -512,50 +810,79 @@ class RetrievalRuntime:
                            (req, RequestState.COMPLETE, "complete"))
 
         # 5) next round's query drifts from this round's rewrite
-        for j, i in enumerate(active):
-            rows = [r for r, o in enumerate(owners) if o == i]
-            g.cur_q[i] = q_out[rows[0]]
+        for j in ret:
+            rows = [r for r, o in enumerate(owners) if o == j]
+            members[j].cur_q = q_out[rows[0]]
 
-        # 6) the earliest finisher opens the next round frontier
-        if continuing and (rnd + 1) not in g.scheduled_rounds:
-            g.scheduled_rounds.add(rnd + 1)
-            self._push(min(continuing), "round", (g, rnd + 1))
+        # 6) never-re-form mode: the cohort's earliest finisher opens the
+        #    shared next-round frontier (dynamic waves instead schedule
+        #    per-request "ready" events above)
+        if cohort is not None and continuing \
+                and (rounds[0] + 1) not in cohort.scheduled_rounds:
+            cohort.scheduled_rounds.add(rounds[0] + 1)
+            self._push(min(continuing), "round", (cohort, rounds[0] + 1))
 
     # ---- admission / memory-pressure plumbing ------------------------------
     def _on_pages_freed(self, pages: int) -> None:
         """Pool subscriber: pages returned to the free list wake parked
-        waves (runs inside whichever event handler freed them)."""
+        requests (runs inside whichever event handler freed them)."""
         if self.engine.admission.parked and not self._retry_scheduled:
             self._retry_scheduled = True
             self._push(self._now, "retry", ())
 
     def _retry_parked(self, now: float, force: bool = False) -> None:
-        """Re-admit every parked wave.  The stall interval becomes a
+        """Wake every parked request.  The stall interval becomes a
         ``pressure_stall`` span and the round restarts from the resume
-        time, so admission delay shows up in admit→complete latency."""
-        for (g, rnd), _npages in self.engine.admission.unpark_all():
-            for i in range(len(g.members)):
-                if rnd >= len(g.plans[i]):
-                    continue
-                req = g.members[i]
-                rs = req.round_start[rnd]
-                if now > rs + 1e-15:
-                    req.timeline.append(Span("pressure_stall", rs, now, rnd))
-                    req.round_start[rnd] = now
-                req.state = RequestState.ADMITTED
-                self.event_log.append((now, "pressure_resume",
-                                       req.request_id))
-            self._push(now, "round", (g, rnd, force))
+        time, so admission delay shows up in admit→complete latency.
+        Dynamically-formed waves dissolve on wake: their members rejoin
+        whatever wave the resume frontier forms (possibly alongside
+        requests admitted while they slept)."""
+        woke_ready = False
+        for key, _npages in self.engine.admission.unpark_all():
+            if isinstance(key, _Wave):
+                for j, m in enumerate(key.members):
+                    if key.rounds[j] >= len(m.plan):
+                        continue
+                    rs = m.ready_t
+                    if now > rs + 1e-15:
+                        m.timeline.append(
+                            Span("pressure_stall", rs, now, key.rounds[j]))
+                    m.ready_t = now
+                    m.state = RequestState.ADMITTED
+                    self.event_log.append((now, "pressure_resume",
+                                           m.request_id))
+                    self._ready.append(m)
+                    woke_ready = True
+            else:
+                g, rnd = key
+                for m in g.members:
+                    if rnd >= len(m.plan):
+                        continue
+                    rs = m.round_start[rnd]
+                    if now > rs + 1e-15:
+                        m.timeline.append(Span("pressure_stall", rs, now,
+                                               rnd))
+                        m.round_start[rnd] = now
+                    m.state = RequestState.ADMITTED
+                    self.event_log.append((now, "pressure_resume",
+                                           m.request_id))
+                self._push(now, "round", (g, rnd, force))
+        if woke_ready:
+            self._push(now, "frontier", (force,))
 
     def _on_member_complete(self, rec: RequestRecord, t: float) -> None:
-        """Completion event: the last member out releases the group's
-        cluster pins, making its pages evictable for parked waves."""
-        g = self._group_of.pop(id(rec), None)
-        if g is None:
-            return
-        g.remaining -= 1
-        if g.remaining == 0:
-            self.engine.buffer.unpin(g.gid)
-            if self.engine.admission.parked and not self._retry_scheduled:
-                self._retry_scheduled = True
-                self._push(t, "retry", ())
+        """Completion event: the request releases its own cluster pins
+        (re-keyed from wave-id to request-id — pages a whole wave
+        shared become evictable when their LAST holder completes), and
+        the per-request completion hook fires."""
+        freed = self.engine.buffer.unpin(rec)
+        if self.on_complete is not None:
+            self.on_complete(rec)
+        # wake parked requests only when this release actually made
+        # pages evictable (the LAST pin holder of a shared working set
+        # dropping out) — an intermediate wave-mate's completion frees
+        # nothing and must not thrash park/re-park cycles
+        if freed and self.engine.admission.parked \
+                and not self._retry_scheduled:
+            self._retry_scheduled = True
+            self._push(t, "retry", ())

@@ -256,8 +256,13 @@ def _pressured_runtime(small_index, pool_clusters=6):
                                      lookahead_rank=16, kernel_mode="ref",
                                      chips=8, seed=3),
                         get_arch("llama3-8b"))
+    # never-re-form mode: this suite pins the legacy group-granular
+    # release ordering (a wave's shared pins free when its LAST member
+    # completes); the per-request fine-grained release is covered in
+    # tests/test_continuous.py
     return eng, RetrievalRuntime(
-        eng, scheduler=TeleRAGScheduler(cache_aware=False), micro_batch=2)
+        eng, scheduler=TeleRAGScheduler(cache_aware=False), micro_batch=2,
+        reform=False)
 
 
 def test_pressure_stall_event_ordering_and_completion(small_store,

@@ -91,10 +91,14 @@ def _legacy_latency(result, mode, *, t_cc, cluster_bytes, link_bw):
 @pytest.mark.parametrize("pipe", ("hyde", "iter", "irg"))
 def test_static_batch_event_clock_matches_legacy_model(
         small_store, small_index, rng, mode, pipe):
+    """The never-re-form mode (``reform=False``, what the deprecated
+    shims run) reproduces the legacy max()-composed closed forms: the
+    admission group stays the wave for every round, so each round's
+    telemetry composes exactly as the pre-runtime lockstep loop did."""
     eng = make_engine(small_index, mode)
     t_cc = eng.effective_tcc()
     ctx = LatencyContext(t_cc=t_cc, cluster_bytes=1e6, link_bw=32e9)
-    runtime = RetrievalRuntime(eng, ctx=ctx)
+    runtime = RetrievalRuntime(eng, ctx=ctx, reform=False)
     q = unit_queries(small_store, rng, 4)
     traces = make_traces(pipe, 4, seed=11)
     recs = [runtime.submit(q[i], traces[i]) for i in range(4)]
