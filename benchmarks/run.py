@@ -22,13 +22,13 @@ def main() -> None:
         args.quick = True
         if args.only is None:
             args.only = ("overlap,sched,admission,openloop,tenants,"
-                         "continuous")
+                         "continuous,decode_microbench")
 
     from benchmarks import (bench_breakdown, bench_budget, bench_continuous,
-                            bench_hitrate, bench_kernels, bench_latency,
-                            bench_nprobe, bench_openloop, bench_overlap,
-                            bench_sched, bench_scaling, bench_tenants,
-                            bench_throughput)
+                            bench_decode_microbench, bench_hitrate,
+                            bench_kernels, bench_latency, bench_nprobe,
+                            bench_openloop, bench_overlap, bench_sched,
+                            bench_scaling, bench_tenants, bench_throughput)
 
     benches = {
         "overlap": lambda: bench_overlap.run(64 if args.quick else 256),
@@ -50,6 +50,9 @@ def main() -> None:
             n_queries=4 if args.quick else 8),
         "kernels": lambda: bench_kernels.run(
             P=512 if args.quick else 2048),
+        "decode_microbench": lambda: (
+            bench_decode_microbench.run_smoke() if args.quick
+            else bench_decode_microbench.run()),
         "openloop": lambda: bench_openloop.run(
             n_requests=16 if args.quick else 48),
         "tenants": lambda: bench_tenants.run(

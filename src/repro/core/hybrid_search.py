@@ -104,11 +104,23 @@ class RetrievalResult:
 
 def hybrid_retrieve(buffer: PrefetchBuffer, queries: np.ndarray,
                     probed_clusters: np.ndarray, *, k: int,
-                    kernel_mode: str = "auto") -> RetrievalResult:
+                    kernel_mode: str = "auto", fused: bool = False,
+                    centroids: Optional[np.ndarray] = None,
+                    ) -> RetrievalResult:
     """queries [B, d]; probed_clusters [B, nprobe] (ranked by q_out).
 
     Device searches every probed cluster that is resident; the host
     searches the rest; results merge on device.
+
+    ``fused=True`` (requires ``centroids``) runs the device partition as
+    ONE ``probe_and_topk`` launch over the pool's resident pages: the
+    centroid probe, top-nprobe cluster admission and masked document
+    top-k all happen in-kernel via the device page table
+    (``page_cluster``), eliminating the host-built [B, Nc] LUT, the
+    [B, num_pages] mask upload, and — in kernel mode — the [B, Nc]
+    score-matrix round trip.  The admitted cluster set equals
+    ``probed_clusters`` (same centroid scores, tie-free), so the host
+    miss partition and telemetry are unchanged.
     """
     B, nprobe = probed_clusters.shape
     buffer.flush_invalidations()
@@ -120,21 +132,32 @@ def hybrid_retrieve(buffer: PrefetchBuffer, queries: np.ndarray,
         hit.append([c for c in cs if c in resident])
         miss.append([c for c in cs if c not in resident])
 
-    # device partition — one fused masked search over the slab with
-    # *per-query* page masks (exact per-query IVF nprobe semantics; mask
-    # is page-level so the traffic is num_pages bytes per query, tiny)
-    Nc = buffer.paged.num_clusters
-    luts = np.zeros((B, Nc), bool)
-    for b in range(B):
-        luts[b, hit[b]] = True
-    pages, page_ids, _ = buffer.device_view()
-    pc = buffer.slot_cluster                    # host page-table mirror
-    page_mask = np.zeros((B, buffer.num_pages), bool)
-    valid_slots = pc >= 0
-    page_mask[:, valid_slots] = luts[:, pc[valid_slots]]
     qd = jnp.asarray(queries, jnp.float32)
-    dev_s, dev_i = ops.ivf_topk(pages, page_ids, jnp.asarray(page_mask), qd,
-                                k, mode=kernel_mode)
+    if fused and centroids is not None:
+        # one-launch device partition: probe + admission + top-k read the
+        # pool pages in place through the device page table — a page is
+        # searchable iff its cluster's centroid score reaches the
+        # nprobe-th largest, which is exactly the probed set
+        pages, page_ids, page_cluster = buffer.device_view()
+        dev_s, dev_i = ops.probe_and_topk(
+            qd, jnp.asarray(centroids, jnp.float32), pages, page_ids,
+            page_cluster, nprobe=nprobe, k=k, mode=kernel_mode)
+    else:
+        # legacy two-launch partition — fused masked search over the slab
+        # with *per-query* page masks built on host (exact per-query IVF
+        # nprobe semantics; mask is page-level so the traffic is
+        # num_pages bytes per query, tiny)
+        Nc = buffer.paged.num_clusters
+        luts = np.zeros((B, Nc), bool)
+        for b in range(B):
+            luts[b, hit[b]] = True
+        pages, page_ids, _ = buffer.device_view()
+        pc = buffer.slot_cluster                # host page-table mirror
+        page_mask = np.zeros((B, buffer.num_pages), bool)
+        valid_slots = pc >= 0
+        page_mask[:, valid_slots] = luts[:, pc[valid_slots]]
+        dev_s, dev_i = ops.ivf_topk(pages, page_ids, jnp.asarray(page_mask),
+                                    qd, k, mode=kernel_mode)
 
     # host partition (scalar scores/ids only cross the link)
     host_results = [host_search(buffer.paged, miss[b], queries[b], k)

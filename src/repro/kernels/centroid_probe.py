@@ -31,7 +31,7 @@ def _kernel(q_ref, cent_ref, valid_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def centroid_scores(queries: jax.Array, centroids: jax.Array,
                     valid: jax.Array, *, tile: int = 512,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = False) -> jax.Array:
     """queries [B, d]; centroids [Nc, d] (Nc % tile == 0); valid [Nc].
     Returns masked scores [B, Nc] fp32."""
     B, d = queries.shape

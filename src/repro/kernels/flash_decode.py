@@ -1,9 +1,16 @@
-"""Pallas TPU kernel: single-token flash-decode attention (GQA).
+"""Pallas TPU kernels: single-token flash-decode attention (GQA), dense
+and paged.
 
-Serving hot path: one new query token attends over a [B, S, KVH, Dh] KV
-cache. Grid = (B, KVH, S-tiles); online-softmax state (m, l, acc) lives in
-VMEM scratch across the innermost S-tile loop; per-batch positions and
-sliding windows are masked with iota arithmetic — no gathers.
+Serving hot path: one new query token attends over the KV cache.  The
+dense form takes a contiguous [B, S, KVH, Dh] cache; the paged form
+(``flash_decode_paged``) gathers K/V pages straight through a
+[B, max_blocks] block table (PagedAttention-style, scalar-prefetch index
+maps), so KV leased page-wise from the shared ``DevicePagePool`` is
+attended IN PLACE — no copy-out into a contiguous cache between the
+memory subsystem and the kernel.  Grid = (B, KVH, S-tiles/blocks);
+online-softmax state (m, l, acc) lives in VMEM scratch across the
+innermost loop; positions and sliding windows are masked with iota
+arithmetic — no gathers in the kernel body.
 
 VMEM working set per step: K/V tiles 2*tile*Dh*2B + G*Dh acc; with
 tile=512, Dh=128, G<=48 this stays well under 1 MiB, leaving headroom for
@@ -67,7 +74,7 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, out_ref, m_s, l_s, acc_s, *,
 @functools.partial(jax.jit, static_argnames=("tile", "window", "interpret"))
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
                  window: int = 0, tile: int = 512,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool = False) -> jax.Array:
     """q [B,KVH,G,Dh]; k,v [B,S,KVH,Dh]; pos [B] -> out [B,KVH,G,Dh] fp32."""
     B, KVH, G, Dh = q.shape
     S = k.shape[1]
@@ -94,3 +101,106 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
                         pltpu.VMEM((G, Dh), jnp.float32)],
         interpret=interpret,
     )(pos, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention: gather K/V pages through a block table in place
+# ---------------------------------------------------------------------------
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, out_ref,
+                  m_s, l_s, acc_s, *, page_size: int, max_blocks: int,
+                  window: int, scale: float):
+    """Same online-softmax state machine as the dense kernel; the S-tile
+    loop walks the request's block table instead of a contiguous cache
+    (the DMA gather happens in the BlockSpec index map via the
+    scalar-prefetched table — PagedAttention-style)."""
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0]                                    # [G, Dh]
+    k = k_ref[0, :, 0, :]                              # [page_size, Dh]
+    v = v_ref[0, :, 0, :]
+    length = len_ref[0]                                # valid tokens, int32
+
+    s = jax.lax.dot_general(q.astype(jnp.float32), k.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # token position of this block's rows in the sequence: unused tail
+    # blocks (table entry -1, clamped to page 0 in the index map) land
+    # entirely past `length`, so the mask zeroes their contribution
+    kp = t * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+    mask = kp < length
+    if window > 0:
+        mask &= kp >= length - window
+    s = jnp.where(mask, s, NEG_INF)                    # [G, page_size]
+
+    m_prev = m_s[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(m_new > NEG_INF, m_new, 0.0)
+    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+    corr = jnp.where(m_prev > NEG_INF, jnp.exp(m_prev - m_safe), 0.0)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(t == max_blocks - 1)
+    def _flush():
+        out_ref[0, 0] = acc_s[...] / jnp.maximum(l_s[...], 1e-20)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       block_table: jax.Array, lengths: jax.Array, *,
+                       window: int = 0, interpret: bool = False) -> jax.Array:
+    """Block-table decode attention over paged KV.
+
+    q [B, KVH, G, Dh]; k_pages, v_pages [NP, ps, KVH, Dh] — the paged KV
+    slab read IN PLACE (no contiguous materialization); block_table
+    [B, max_blocks] int32 (page slot of each sequence block, -1 =
+    unallocated tail); lengths [B] int32 valid tokens (>= 1).  Returns
+    [B, KVH, G, Dh] fp32, identical to ``flash_decode`` over the
+    gathered-dense cache with ``pos = lengths - 1``.
+
+    The block table rides the scalar-prefetch channel so each grid
+    step's K/V page DMA is issued straight from the table — the kernel
+    body never gathers.
+    """
+    B, KVH, G, Dh = q.shape
+    NP, ps, _, _ = k_pages.shape
+    MB = block_table.shape[1]
+    scale = 1.0 / math.sqrt(Dh)
+    kern = functools.partial(_paged_kernel, page_size=ps, max_blocks=MB,
+                             window=window, scale=scale)
+
+    def kv_ix(b, h, t, bt):
+        return (jnp.maximum(bt[b, t], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KVH, MB),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, t, bt: (b,)),            # lengths
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, t, bt: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, Dh), kv_ix),                     # k pages
+            pl.BlockSpec((1, ps, 1, Dh), kv_ix),                     # v pages
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh), lambda b, h, t, bt: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, Dh), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, Dh), jnp.float32),
+        interpret=interpret,
+    )(block_table, lengths, q, k_pages, v_pages)

@@ -90,7 +90,7 @@ def _kernel(q_ref, pages_ref, ids_ref, mask_ref, out_s_ref, out_i_ref,
 def ivf_topk_flat(queries: jax.Array, flat_pages: jax.Array,
                   flat_ids: jax.Array, page_mask: jax.Array, *,
                   k: int, page_size: int, tile: int = 1024,
-                  interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+                  interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
     """queries [B, d]; flat_pages [N, d]; flat_ids [N]; page_mask [B, N/ps].
 
     N % tile == 0 and tile % page_size == 0 (ops.py pads). Returns

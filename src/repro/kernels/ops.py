@@ -1,16 +1,31 @@
 """Jit'd public wrappers around the Pallas kernels with oracle fallback.
 
-Mode resolution:
-  * "auto"            — real kernel on TPU, jnp oracle elsewhere (fast CPU)
-  * "kernel"          — pallas kernel, compiled for the current backend
-  * "kernel_interpret"— pallas kernel body interpreted in Python (CPU
-                        validation path; what the parity tests use)
-  * "ref"             — pure-jnp oracle
+ONE mode-dispatch layer for every kernel — resolution order:
+
+  1. an explicit non-"auto" ``mode=`` argument;
+  2. the ``REPRO_KERNEL_MODE`` environment variable (when the call said
+     "auto" — one switch flips the whole serving stack, no per-kernel
+     hardcoded defaults);
+  3. backend auto-detect: real compiled kernel on TPU, pure-jnp oracle
+     everywhere else (fast CPU path).
+
+Accepted modes (aliases in parentheses):
+  * "auto"                      — the detection above
+  * "kernel" ("tpu")            — pallas kernel compiled for the backend
+  * "kernel_interpret" ("interpret") — pallas kernel body interpreted in
+                                  Python (CPU validation; what the
+                                  parity tests use)
+  * "ref" ("oracle")            — pure-jnp oracle
+
+Paged entry points (``flash_decode_paged``, ``probe_and_topk``) read the
+pool's pages IN PLACE through block tables / slot-cluster maps — no
+compaction copy between ``memory/pool.py`` and the kernels; the dense
+forms keep their pad-and-flatten prep for callers that hold dense slabs.
 """
 
 from __future__ import annotations
 
-import functools
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -19,15 +34,44 @@ import jax.numpy as jnp
 from repro.kernels import ref as ref_mod
 from repro.kernels.centroid_probe import centroid_scores as _probe_kernel
 from repro.kernels.flash_decode import flash_decode as _flash_kernel
+from repro.kernels.flash_decode import flash_decode_paged as _flash_paged_kernel
 from repro.kernels.ivf_topk import ivf_topk_flat as _ivf_kernel
+from repro.kernels.probe_topk import probe_topk_fused as _probe_topk_kernel
 
 DEFAULT_MODE = "auto"
+MODE_ENV_VAR = "REPRO_KERNEL_MODE"
+_ALIASES = {
+    "auto": "auto",
+    "ref": "ref", "oracle": "ref",
+    "kernel": "kernel", "tpu": "kernel", "compiled": "kernel",
+    "kernel_interpret": "kernel_interpret", "interpret": "kernel_interpret",
+}
 
 
-def _resolve(mode: str) -> str:
+def resolve_mode(mode: Optional[str] = DEFAULT_MODE) -> str:
+    """Resolve a requested mode to an execution plane ("ref" | "kernel"
+    | "kernel_interpret"): explicit mode > ``REPRO_KERNEL_MODE`` env >
+    backend auto-detect (TPU -> compiled kernel, else oracle)."""
+    if mode is None:
+        mode = "auto"
     if mode == "auto":
+        mode = os.environ.get(MODE_ENV_VAR, "").strip().lower() or "auto"
+    if mode not in _ALIASES:
+        raise ValueError(
+            f"unknown kernel mode {mode!r} (from {MODE_ENV_VAR}= or call "
+            f"site); valid: {sorted(_ALIASES)}")
+    resolved = _ALIASES[mode]
+    if resolved == "auto":
         return "kernel" if jax.default_backend() == "tpu" else "ref"
-    return mode
+    return resolved
+
+
+def _interpret(m: str) -> bool:
+    return m == "kernel_interpret"
+
+
+# kept for callers/tests that used the private resolver
+_resolve = resolve_mode
 
 
 def _pad_rows(x: jax.Array, multiple: int, fill=0):
@@ -39,12 +83,21 @@ def _pad_rows(x: jax.Array, multiple: int, fill=0):
     return jnp.pad(x, widths, constant_values=fill)
 
 
+def _divisor_tile(n: int, want: int) -> int:
+    """Largest tile <= want that divides n (paged inputs are read in
+    place, so the tile must divide instead of padding a copy)."""
+    for t in range(min(want, n), 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
 def ivf_topk(pages: jax.Array, page_ids: jax.Array, page_mask: jax.Array,
              queries: jax.Array, k: int, *, tile: int = 1024,
              mode: str = DEFAULT_MODE) -> Tuple[jax.Array, jax.Array]:
     """Search the prefetch slab. pages [P,ps,d]; page_mask [P] or per-query
     [B,P]; queries [B,d] -> (scores [B,k], ids [B,k])."""
-    m = _resolve(mode)
+    m = resolve_mode(mode)
     if m == "ref":
         return ref_mod.ivf_topk_ref(pages, page_ids, page_mask, queries, k)
     B = queries.shape[0]
@@ -61,14 +114,14 @@ def ivf_topk(pages: jax.Array, page_ids: jax.Array, page_mask: jax.Array,
     if pad_pages:
         page_mask = jnp.pad(page_mask, ((0, 0), (0, pad_pages)))
     return _ivf_kernel(queries, flat, ids, page_mask, k=k, page_size=ps,
-                       tile=tile, interpret=(m == "kernel_interpret"))
+                       tile=tile, interpret=_interpret(m))
 
 
 def centroid_probe(centroids: jax.Array, queries: jax.Array, nprobe: int, *,
                    valid: Optional[jax.Array] = None, tile: int = 512,
                    mode: str = DEFAULT_MODE) -> Tuple[jax.Array, jax.Array]:
     """Coarse probe -> (scores [B,nprobe], cluster ids [B,nprobe])."""
-    m = _resolve(mode)
+    m = resolve_mode(mode)
     Nc = centroids.shape[0]
     if valid is None:
         valid = jnp.ones((Nc,), bool)
@@ -79,15 +132,45 @@ def centroid_probe(centroids: jax.Array, queries: jax.Array, nprobe: int, *,
         cent = _pad_rows(centroids, tile)
         v = _pad_rows(valid, tile, fill=False)
         s = _probe_kernel(queries, cent, v, tile=tile,
-                          interpret=(m == "kernel_interpret"))[:, :Nc]
+                          interpret=_interpret(m))[:, :Nc]
     return jax.lax.top_k(s, nprobe)
+
+
+def probe_and_topk(queries: jax.Array, centroids: jax.Array,
+                   pages: jax.Array, page_ids: jax.Array,
+                   page_cluster: jax.Array, *, nprobe: int, k: int,
+                   valid: Optional[jax.Array] = None, cent_tile: int = 512,
+                   page_tile: int = 8, mode: str = DEFAULT_MODE,
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """ONE-launch fused retrieval over resident pool pages: centroid
+    probe + top-nprobe cluster admission + masked top-k, reading the
+    pool's ``device_view`` (pages [P,ps,d], page_ids [P,ps],
+    page_cluster [P]) in place.  Replaces the ``centroid_probe`` ->
+    host-built page mask -> ``ivf_topk``-over-compacted-slab chain on
+    the serving hot path.  Returns (scores [B,k], doc ids [B,k])."""
+    m = resolve_mode(mode)
+    Nc = centroids.shape[0]
+    nprobe = max(1, min(nprobe, Nc))
+    if valid is None:
+        valid = jnp.ones((Nc,), bool)
+    if m == "ref":
+        return ref_mod.probe_and_topk_ref(queries, centroids, valid, pages,
+                                          page_ids, page_cluster, nprobe, k)
+    ct = min(cent_tile, Nc)
+    cent = _pad_rows(centroids, ct)
+    v = _pad_rows(valid, ct, fill=False)
+    P = pages.shape[0]
+    pt = _divisor_tile(P, page_tile)
+    return _probe_topk_kernel(queries, cent, v, pages, page_ids,
+                              page_cluster, nprobe=nprobe, k=k, cent_tile=ct,
+                              page_tile=pt, interpret=_interpret(m))
 
 
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
                  window: int = 0, tile: int = 512,
                  mode: str = DEFAULT_MODE) -> jax.Array:
-    """Decode attention [B,KVH,G,Dh] over KV [B,S,KVH,Dh]."""
-    m = _resolve(mode)
+    """Decode attention [B,KVH,G,Dh] over dense KV [B,S,KVH,Dh]."""
+    m = resolve_mode(mode)
     if m == "ref":
         return ref_mod.flash_decode_ref(q, k, v, pos, window)
     S = k.shape[1]
@@ -95,4 +178,20 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
     if S % tile:
         tile = S
     return _flash_kernel(q, k, v, pos, window=window, tile=tile,
-                         interpret=(m == "kernel_interpret"))
+                         interpret=_interpret(m))
+
+
+def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       block_table: jax.Array, lengths: jax.Array, *,
+                       window: int = 0,
+                       mode: str = DEFAULT_MODE) -> jax.Array:
+    """Decode attention [B,KVH,G,Dh] over paged KV [NP,ps,KVH,Dh]
+    gathered through ``block_table`` [B,max_blocks] (-1 = unallocated)
+    with per-request ``lengths`` [B] — the block-table form of
+    ``flash_decode`` (identical numerics at ``pos = lengths - 1``)."""
+    m = resolve_mode(mode)
+    if m == "ref":
+        return ref_mod.flash_decode_paged_ref(q, k_pages, v_pages,
+                                              block_table, lengths, window)
+    return _flash_paged_kernel(q, k_pages, v_pages, block_table, lengths,
+                               window=window, interpret=_interpret(m))

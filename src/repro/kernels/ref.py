@@ -42,6 +42,32 @@ def centroid_probe_ref(centroids: jax.Array, queries: jax.Array,
     return s
 
 
+def probe_and_topk_ref(queries: jax.Array, centroids: jax.Array,
+                       valid: jax.Array, pages: jax.Array,
+                       page_ids: jax.Array, page_cluster: jax.Array,
+                       nprobe: int, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Fused-retrieval oracle: centroid probe -> top-nprobe cluster set
+    -> per-query page mask over the pool slab -> masked top-k.  This IS
+    the unfused composition (``lax.top_k`` selection, exact legacy
+    hybrid-search semantics incl. tie-breaks); the Pallas kernel
+    replicates it threshold-wise (ties at the nprobe-th score admit
+    every tied cluster — identical on tie-free scores).
+
+    queries [B, d]; centroids [Nc, d]; valid [Nc] bool; pages [P, ps, d];
+    page_ids [P, ps]; page_cluster [P] (-1 = unsearchable slot).
+    Returns (scores [B, k] fp32, doc ids [B, k] int32).
+    """
+    B = queries.shape[0]
+    Nc = centroids.shape[0]
+    s = centroid_probe_ref(centroids, queries, valid)          # [B, Nc]
+    top_s, top_i = jax.lax.top_k(s, min(nprobe, Nc))
+    lut = jnp.zeros((B, Nc), bool).at[
+        jnp.arange(B)[:, None], top_i].set(jnp.isfinite(top_s))
+    page_mask = jnp.where(page_cluster[None, :] >= 0,
+                          lut[:, jnp.clip(page_cluster, 0)], False)  # [B, P]
+    return ivf_topk_ref(pages, page_ids, page_mask, queries, k)
+
+
 def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                      pos: jax.Array, window: int = 0) -> jax.Array:
     """Single-token decode attention oracle.
@@ -62,3 +88,22 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     s = jnp.where(mask, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+
+
+def flash_decode_paged_ref(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_table: jax.Array,
+                           lengths: jax.Array, window: int = 0) -> jax.Array:
+    """Paged decode-attention oracle: gather the block table into a
+    dense cache, then run the dense oracle with ``pos = lengths - 1``
+    (lengths must be >= 1; -1 table entries are unallocated tail blocks,
+    masked out by the position test either way).
+
+    q [B, KVH, G, Dh]; k_pages, v_pages [NP, ps, KVH, Dh]; block_table
+    [B, MB] int32; lengths [B] int32.  Returns [B, KVH, G, Dh] fp32.
+    """
+    B, MB = block_table.shape
+    NP, ps, KVH, Dh = k_pages.shape
+    bt = jnp.maximum(block_table, 0)
+    k = k_pages[bt].reshape(B, MB * ps, KVH, Dh)
+    v = v_pages[bt].reshape(B, MB * ps, KVH, Dh)
+    return flash_decode_ref(q, k, v, lengths - 1, window)

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 import repro.core as core
 from repro.configs import get_arch
+from repro.launch import env as launch_env
 from repro.models import transformer as tf
 from repro.serving import (DecodeEvent, EngineConfig, KVCacheManager,
                            RagRequest, TeleRAGServer, make_traces, sample,
@@ -52,7 +53,14 @@ def main():
     ap.add_argument("--static-groups", action="store_true",
                     help="legacy group-granular execution instead of "
                          "per-request continuous batching")
+    ap.add_argument("--print-env", action="store_true",
+                    help="print the recommended launch environment "
+                         "(tcmalloc preload, XLA flags) and exit")
     args = ap.parse_args()
+
+    if args.print_env:
+        launch_env.print_env()
+        return
 
     print(f"# building datastore ({args.vectors} x 192d, "
           f"{args.clusters} clusters)")

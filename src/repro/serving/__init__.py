@@ -4,7 +4,8 @@ from repro.serving.api import (RagRequest, RagResponse, ReplicaTelemetry,
                                summarize_latency)
 from repro.serving.engine import (EngineConfig, RequestResult, RoundTelemetry,
                                   TeleRAGEngine)
-from repro.serving.kv_cache import CacheLease, KVCacheManager
+from repro.serving.kv_cache import (CacheLease, KVCacheManager, KVPageSlab,
+                                    PagedCacheLease)
 from repro.serving.pipelines import (GlobalBatchReport,
                                      MultiReplicaOrchestrator,
                                      PipelineExecutor, PIPELINE_NAMES)
@@ -21,7 +22,7 @@ __all__ = [
     "RagRequest", "RagResponse", "ReplicaTelemetry", "ServerTelemetry",
     "TeleRAGServer", "TenantTelemetry", "WaveDispatch", "summarize_latency",
     "EngineConfig", "RequestResult", "RoundTelemetry", "TeleRAGEngine",
-    "CacheLease", "KVCacheManager",
+    "CacheLease", "KVCacheManager", "KVPageSlab", "PagedCacheLease",
     "GlobalBatchReport", "MultiReplicaOrchestrator", "PipelineExecutor",
     "PIPELINE_NAMES",
     "LatencyContext", "RetrievalPolicy", "get_policy", "policy_names",

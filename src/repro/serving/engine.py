@@ -57,6 +57,9 @@ class EngineConfig:
     lookahead_rank: int = 512                     # clusters ranked by q_in
     mode: str = "telerag"                         # telerag|cpu_baseline|runtime_fetch
     kernel_mode: str = "auto"
+    fused_retrieval: bool = True                  # one-launch probe+topk on the
+                                                  # device partition (False =
+                                                  # legacy host-mask two-launch)
     cache: CacheConfig = field(default_factory=CacheConfig)
     cache_enabled: bool = False                   # paper: off on single GPU
     hw: HardwareProfile = TPU_V5E

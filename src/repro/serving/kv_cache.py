@@ -20,15 +20,26 @@ bucket's bytes to the owning request's tenant on the ledger
 the pool's per-tenant occupancy; a recycled bucket is re-attributed to
 whichever tenant reuses it.  ``ServerTelemetry.tenants`` surfaces the
 per-tenant KV footprint.
+
+**Paged mode** (``init_paged``/``acquire_paged``) replaces the
+contiguous per-bucket cache with block-table leases over one shared KV
+page slab: a ``PagedCacheLease`` is a [batch, max_blocks] table of slab
+page slots plus per-sequence lengths — exactly the operands
+``kernels.ops.flash_decode_paged`` gathers through in place
+(PagedAttention-style), so decode attention reads leased pages with no
+contiguous copy and no [B, max_len] over-allocation.  The same pool
+byte accounting applies per lease.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.memory.pool import DevicePagePool, PageLease, PoolExhausted
@@ -65,6 +76,7 @@ class KVCacheManager:
         self.pool = pool
         self._pool_buckets: Dict[Tuple[int, int], Tuple[dict, Optional[PageLease]]] = {}
         self._nbytes_memo: Dict[Tuple[int, int], int] = {}
+        self.slab: Optional["KVPageSlab"] = None   # init_paged() creates it
 
     def acquire(self, batch: int, max_len: int, *, fresh: bool = False,
                 tenant: str = "shared") -> CacheLease:
@@ -143,3 +155,161 @@ class KVCacheManager:
             self._nbytes_memo[key] = sum(s.size * s.dtype.itemsize
                                          for s in jax.tree.leaves(shapes))
         return self._nbytes_memo[key]
+
+    # -- paged KV (block-table leases over a shared KV page slab) ----------
+
+    def init_paged(self, num_pages: int, page_size: int = 16) -> "KVPageSlab":
+        """Allocate the manager's KV page slab: ``num_pages`` page slots
+        of ``page_size`` tokens each, all layers stacked —
+        k/v [L, num_pages, page_size, KVH, Dh].  GQA attention archs
+        only (SSM state is O(1) per request; nothing to page)."""
+        if (tf.family_kind(self.cfg) != "attn" or not self.cfg.has_attention
+                or self.cfg.attn_kind != "gqa"):
+            raise ValueError(
+                "paged KV supports plain GQA attention caches only "
+                f"(arch family {tf.family_kind(self.cfg)!r}, "
+                f"attn_kind {self.cfg.attn_kind!r})")
+        L = self.cfg.num_layers
+        KVH, Dh = self.cfg.num_kv_heads, self.cfg.resolved_head_dim
+        shape = (L, num_pages, page_size, KVH, Dh)
+        self.slab = KVPageSlab(
+            k=jnp.zeros(shape, self.dtype), v=jnp.zeros(shape, self.dtype),
+            page_size=page_size, free=list(range(num_pages)))
+        return self.slab
+
+    def paged_page_nbytes(self) -> int:
+        """Exact bytes of one KV page slot (k+v, all layers)."""
+        slab = self._require_slab()
+        per = slab.k.dtype.itemsize
+        L, _, ps, KVH, Dh = slab.k.shape
+        return 2 * L * ps * KVH * Dh * per
+
+    def acquire_paged(self, batch: int, max_len: int, *,
+                      tenant: str = "shared") -> "PagedCacheLease":
+        """Lease a block-table decode cache: ceil(max_len/page_size)
+        slab pages per sequence, handed back as a [batch, max_blocks]
+        block table the paged kernels gather through — no contiguous
+        [B, S] cache is ever materialized.  Bytes are charged to the
+        pool ledger (category ``"kv"``, tenant-tagged) exactly like the
+        dense buckets; raises ``PoolExhausted`` when either the slab's
+        free list or the pool cannot cover it."""
+        slab = self._require_slab()
+        ps = slab.page_size
+        max_blocks = -(-max_len // ps)
+        need = batch * max_blocks
+        if len(slab.free) < need:
+            raise PoolExhausted(
+                f"kv page slab exhausted: need {need} pages for "
+                f"({batch}, {max_len}), {len(slab.free)} free")
+        nbytes = need * self.paged_page_nbytes()
+        page_lease = None
+        if self.pool is not None:
+            page_lease = self.pool.lease_bytes(nbytes, "kv",
+                                               tag=(batch, max_len),
+                                               tenant=tenant)
+            if page_lease is None and self._pool_buckets:
+                self.drop_all()          # spill recycled dense buckets first
+                page_lease = self.pool.lease_bytes(nbytes, "kv",
+                                                   tag=(batch, max_len),
+                                                   tenant=tenant)
+            if page_lease is None:
+                raise PoolExhausted(
+                    f"paged kv cache ({batch}, {max_len}) needs {nbytes} "
+                    f"bytes; pool has {self.pool.reservable_pages()} "
+                    f"reservable pages of {self.pool.page_nbytes} bytes")
+        slots = [slab.free.pop() for _ in range(need)]
+        bt = np.asarray(slots, np.int32).reshape(batch, max_blocks)
+        return PagedCacheLease(block_table=bt,
+                               lengths=np.zeros(batch, np.int32),
+                               batch=batch, max_len=max_len, nbytes=nbytes,
+                               page_lease=page_lease, tenant=tenant)
+
+    def append_paged(self, lease: "PagedCacheLease", k_new: jax.Array,
+                     v_new: jax.Array) -> None:
+        """Write one decode step's K/V (``[L, B, KVH, Dh]``) at each
+        sequence's current length through the block table (donated
+        in-place scatter — the slab is never copied) and advance
+        ``lease.lengths``."""
+        slab = self._require_slab()
+        ps = slab.page_size
+        if int(lease.lengths.max(initial=0)) >= lease.max_len:
+            raise ValueError(f"paged lease full at max_len={lease.max_len}")
+        slots = lease.block_table[np.arange(lease.batch),
+                                  lease.lengths // ps]
+        offs = lease.lengths % ps
+        slab.k, slab.v = _append_token(
+            slab.k, slab.v, jnp.asarray(k_new), jnp.asarray(v_new),
+            jnp.asarray(slots), jnp.asarray(offs, np.int32))
+        lease.lengths += 1
+
+    def release_paged(self, lease: "PagedCacheLease") -> int:
+        """Return the lease's slab pages to the free list and release
+        its pool bytes; returns bytes freed.  Paged leases are per
+        request batch — no recycling bucket (block tables are cheap to
+        rebuild; the slab itself stays allocated)."""
+        slab = self._require_slab()
+        slab.free.extend(int(s) for s in lease.block_table.reshape(-1))
+        lease.block_table = np.full_like(lease.block_table, -1)
+        if lease.page_lease is not None and self.pool is not None:
+            self.pool.release(lease.page_lease)
+            lease.page_lease = None
+        return lease.nbytes
+
+    def _require_slab(self) -> "KVPageSlab":
+        if self.slab is None:
+            raise RuntimeError("call init_paged(num_pages) before using "
+                               "the paged KV API")
+        return self.slab
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _append_token(k_slab, v_slab, k_new, v_new, slots, offs):
+    """One donated scatter: k/v [L, NP, ps, KVH, Dh] <- new [L, B, KVH, Dh]
+    at (slots[b], offs[b]) — the paged analogue of the dense cache's
+    dynamic-update-slice write."""
+    k_slab = k_slab.at[:, slots, offs].set(k_new.astype(k_slab.dtype))
+    v_slab = v_slab.at[:, slots, offs].set(v_new.astype(v_slab.dtype))
+    return k_slab, v_slab
+
+
+@dataclass
+class KVPageSlab:
+    """The manager-owned paged KV arrays (all layers stacked) plus the
+    host-side free list of page slots.  ``k[l]`` / ``v[l]`` are exactly
+    the ``[NP, page_size, KVH, Dh]`` operands ``flash_decode_paged``
+    reads in place."""
+
+    k: jax.Array
+    v: jax.Array
+    page_size: int
+    free: List[int] = field(default_factory=list)
+
+    @property
+    def num_pages(self) -> int:
+        """Total KV page slots in the slab (free + leased)."""
+        return self.k.shape[1]
+
+    def layer(self, l: int) -> Tuple[jax.Array, jax.Array]:
+        """(k_pages, v_pages) for layer ``l`` — the paged-attention view."""
+        return self.k[l], self.v[l]
+
+
+@dataclass
+class PagedCacheLease:
+    """One leased block-table decode cache: ``block_table`` [B, MB]
+    int32 (slab page slot per sequence block, -1 after release) and
+    ``lengths`` [B] int32 (tokens written so far — what
+    ``flash_decode_paged`` masks on), plus the same byte/tenant
+    accounting as the dense ``CacheLease``."""
+
+    block_table: np.ndarray
+    lengths: np.ndarray
+    batch: int
+    max_len: int
+    nbytes: int = 0
+    page_lease: Optional[PageLease] = None
+    tenant: str = "shared"
+
+    def device_tables(self) -> Tuple[jax.Array, jax.Array]:
+        """(block_table, lengths) as device arrays for the kernel."""
+        return jnp.asarray(self.block_table), jnp.asarray(self.lengths)

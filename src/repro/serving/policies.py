@@ -117,7 +117,9 @@ class RetrievalPolicy:
                          ranked_out: np.ndarray) -> RetrievalResult:
         res = hybrid_retrieve(engine.buffer, q_out, ranked_out,
                               k=engine.cfg.top_k,
-                              kernel_mode=engine.cfg.kernel_mode)
+                              kernel_mode=engine.cfg.kernel_mode,
+                              fused=engine.cfg.fused_retrieval,
+                              centroids=engine.index.centroids)
         used = [c for h in res.hit_clusters for c in h]
         engine.cache.record_lookup([c for r in ranked_out for c in r],
                                    engine.buffer.resident_clusters())

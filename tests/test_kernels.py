@@ -79,6 +79,110 @@ def test_flash_decode_parity(B, S, KVH, G, Dh, window, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("B,KVH,G,Dh,ps,MB,window", [
+    (3, 2, 4, 32, 16, 5, 0),
+    (3, 2, 4, 32, 16, 5, 20),
+    (1, 1, 8, 64, 8, 3, 0),      # MQA
+    (2, 4, 1, 64, 32, 2, 10),
+])
+@pytest.mark.parametrize("mode", ["ref", "kernel_interpret"])
+def test_flash_decode_paged_parity(B, KVH, G, Dh, ps, MB, window, mode):
+    """Paged == dense over ragged block tables, incl. partially filled
+    last blocks and unallocated (-1) tail entries."""
+    rng = np.random.default_rng(B * 100 + ps + window)
+    NP = B * MB + 4                             # slab bigger than needed
+    q = jnp.asarray(rng.standard_normal((B, KVH, G, Dh)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((NP, ps, KVH, Dh)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((NP, ps, KVH, Dh)), jnp.float32)
+    # non-contiguous slots per request; lengths hit partial last blocks
+    perm = rng.permutation(NP)[:B * MB].reshape(B, MB)
+    lengths = rng.integers(1, MB * ps + 1, B)
+    bt = perm.copy()
+    for b in range(B):
+        bt[b, -(-int(lengths[b]) // ps):] = -1  # unallocated tail
+    bt = jnp.asarray(bt, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    out = ops.flash_decode_paged(q, kp, vp, bt, lengths, window=window,
+                                 mode=mode)
+    # oracle: gather the table into a dense cache, dense kernel at
+    # pos = lengths - 1
+    dense_k = kp[jnp.maximum(bt, 0)].reshape(B, MB * ps, KVH, Dh)
+    dense_v = vp[jnp.maximum(bt, 0)].reshape(B, MB * ps, KVH, Dh)
+    o_ref = ref.flash_decode_ref(q, dense_k, dense_v, lengths - 1, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,d,Nc,P,ps,nprobe,k", [
+    (4, 64, 24, 18, 8, 7, 5),
+    (1, 32, 16, 6, 16, 3, 4),
+    (6, 128, 32, 24, 4, 16, 8),
+])
+@pytest.mark.parametrize("mode", ["ref", "kernel_interpret"])
+def test_probe_and_topk_matches_composition(B, d, Nc, P, ps, nprobe, k, mode):
+    """Fused one-launch retrieval == centroid_probe -> page mask ->
+    ivf_topk on random page tables (incl. unsearchable -1 slots and
+    padded page tails)."""
+    rng = np.random.default_rng(B * 31 + Nc)
+    qs = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    cents = jnp.asarray(rng.standard_normal((Nc, d)), jnp.float32)
+    pages = jnp.asarray(rng.standard_normal((P, ps, d)), jnp.float32)
+    pids = jnp.asarray(rng.permutation(P * ps).reshape(P, ps), jnp.int32)
+    pids = pids.at[0, ps // 2:].set(-1)                 # padded page tail
+    pc = jnp.asarray(rng.integers(-1, Nc, P), jnp.int32)  # -1 = unsearchable
+    s_f, i_f = ops.probe_and_topk(qs, cents, pages, pids, pc, nprobe=nprobe,
+                                  k=k, cent_tile=8, page_tile=2, mode=mode)
+    # unfused composition via the public ops
+    ps_, pi_ = ops.centroid_probe(cents, qs, nprobe, mode="ref")
+    lut = np.zeros((B, Nc), bool)
+    for b in range(B):
+        lut[b, np.asarray(pi_)[b][np.isfinite(np.asarray(ps_)[b])]] = True
+    pcn = np.asarray(pc)
+    mask = np.zeros((B, P), bool)
+    mask[:, pcn >= 0] = lut[:, pcn[pcn >= 0]]
+    s_u, i_u = ops.ivf_topk(pages, pids, jnp.asarray(mask), qs, k, mode="ref")
+    np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_u))
+    np.testing.assert_allclose(np.asarray(s_f), np.asarray(s_u),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_resolve_mode_env_and_aliases(monkeypatch):
+    """ONE dispatch layer: explicit mode > REPRO_KERNEL_MODE env >
+    backend autodetect; aliases resolve; unknown modes raise."""
+    monkeypatch.delenv(ops.MODE_ENV_VAR, raising=False)
+    auto = ops.resolve_mode("auto")
+    assert auto == ("kernel" if jax.default_backend() == "tpu" else "ref")
+    assert ops.resolve_mode(None) == auto
+    # aliases
+    assert ops.resolve_mode("tpu") == "kernel"
+    assert ops.resolve_mode("compiled") == "kernel"
+    assert ops.resolve_mode("oracle") == "ref"
+    assert ops.resolve_mode("interpret") == "kernel_interpret"
+    # env only applies when the call says "auto"
+    monkeypatch.setenv(ops.MODE_ENV_VAR, "interpret")
+    assert ops.resolve_mode("auto") == "kernel_interpret"
+    assert ops.resolve_mode("ref") == "ref"
+    monkeypatch.setenv(ops.MODE_ENV_VAR, "bogus")
+    with pytest.raises(ValueError):
+        ops.resolve_mode("auto")
+    with pytest.raises(ValueError):
+        ops.resolve_mode("not-a-mode")
+
+
+def test_env_mode_flips_whole_stack(monkeypatch):
+    """REPRO_KERNEL_MODE=interpret routes a default-mode op through the
+    pallas interpreter — same numbers as the oracle."""
+    rng = np.random.default_rng(3)
+    cents = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((2, 16)), jnp.float32)
+    monkeypatch.setenv(ops.MODE_ENV_VAR, "interpret")
+    si, ii = ops.centroid_probe(cents, q, 4)
+    monkeypatch.delenv(ops.MODE_ENV_VAR)
+    sr, ir = ops.centroid_probe(cents, q, 4, mode="ref")
+    np.testing.assert_allclose(np.asarray(si), np.asarray(sr), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ii), np.asarray(ir))
+
+
 def test_flash_decode_matches_model_decode_attention():
     """Kernel semantics == the pure-JAX decode attention used by serve_step."""
     from repro.models.attention import _decode_attention

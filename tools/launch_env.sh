@@ -1,0 +1,11 @@
+#!/usr/bin/env sh
+# Apply the recommended launch environment for this machine.
+#
+#   . tools/launch_env.sh          # source into the current shell
+#
+# The knobs themselves (tcmalloc LD_PRELOAD, large-alloc threshold,
+# TF log level, XLA step-marker / host-device-count flags) live in ONE
+# place — src/repro/launch/env.py — so this wrapper just evals its
+# export lines; `python -m repro.launch.env` shows them with a
+# divergence report for the current process.
+eval "$(PYTHONPATH=src python -m repro.launch.env | grep '^export ')"
