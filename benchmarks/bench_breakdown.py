@@ -10,7 +10,8 @@ import numpy as np
 import repro.core as core
 from repro.serving import PipelineExecutor, make_traces
 from benchmarks.common import (bench_index, bench_queries, emit, make_engine,
-                               paper_scale_tcc, write_csv)
+                               paper_scale_tcc, write_csv,
+                               summarize_rows, write_report)
 from benchmarks.bench_latency import modeled_latency
 
 
@@ -49,6 +50,7 @@ def run(n_queries: int = 8):
         emit(f"breakdown/{pipe}", tele * 1e6,
              f"ret_frac={rows[-1]['retrieval_frac_cpu_system']}")
     write_csv("fig4_5_breakdown", rows)
+    write_report("breakdown", metrics=summarize_rows(rows), rows=rows)
     return rows
 
 

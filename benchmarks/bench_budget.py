@@ -20,7 +20,8 @@ import repro.core as core
 from repro.configs import get_arch
 from repro.serving import calibration_windows
 from benchmarks.common import (NPROBE, bench_index, bench_queries, emit,
-                               make_engine, paper_scale_tcc, write_csv)
+                               make_engine, paper_scale_tcc, write_csv,
+                               summarize_rows, write_report)
 
 
 def run(pipeline: str = "hyde", n_queries: int = 16):
@@ -53,6 +54,7 @@ def run(pipeline: str = "hyde", n_queries: int = 16):
                                   + miss_fn(b) * NPROBE * t_cc) * 1e3, 3)}
             for b, h in zip(budgets, hit_rates)]
     write_csv("appC_budget", rows)
+    write_report("budget", metrics=summarize_rows(rows), rows=rows)
     emit("budget/case1", t_llm * 1e6,
          f"b1_frac={b_case1/total:.3f};case2={'none' if b_case2 is None else round(b_case2/total,3)}")
     # hit rate must be monotone in budget
@@ -102,6 +104,7 @@ def run_admission(n_queries: int = 8):
              "stalled_requests": len(set(stalls)),
              "ledger_peak_mb": round(eng.ledger.peak_bytes / 1e6, 3)}]
     write_csv("admission_smoke", rows)
+    write_report("admission", metrics=summarize_rows(rows), rows=rows)
     emit("budget/admission", adm.stalled,
          f"resumed={adm.resumed};capped={adm.capped};"
          f"spill_pages={adm.spilled_pages}")

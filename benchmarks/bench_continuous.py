@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.serving import make_traces, summarize_latency
 from benchmarks.common import (bench_queries, emit, make_server,
-                               serve_requests, write_csv)
+                               serve_requests, write_csv,
+                               summarize_rows, write_report)
 
 PIPELINE_MIX = ("hyde", "iter", "irg", "flare")
 
@@ -96,6 +97,7 @@ def run(n_requests: int = 32, replicas: int = 2, micro_batch: int = 4,
     assert stats[True][1] >= stats[False][1] * (1 - 1e-9), \
         f"per-request throughput regressed: {stats}"
     write_csv("continuous_vs_static", rows)
+    write_report("continuous", metrics=summarize_rows(rows), rows=rows)
     return rows
 
 

@@ -44,7 +44,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.kernels import ops
 from repro.serving.kv_cache import KVCacheManager
-from benchmarks.common import BENCH_DIR, emit
+from benchmarks.common import BENCH_DIR, emit, summarize_rows, write_report
 
 SCHEMA = "telerag.decode_microbench/v1"
 
@@ -204,6 +204,9 @@ def run(*, B: int = 8, S: int = 1024, KVH: int = 8, G: int = 4,
     path = out or os.path.join(BENCH_DIR, "decode_microbench.json")
     with open(path, "w") as f:
         json.dump(report, f, indent=1)
+    # the uniform telerag.bench/v1 report alongside the detailed one
+    write_report("decode_microbench", metrics=summarize_rows(records),
+                 rows=records, meta={"mode": resolved, "steps": steps})
     return report
 
 

@@ -13,7 +13,8 @@ import repro.core as core
 from repro.configs import get_arch
 from repro.serving import PipelineExecutor, calibration_windows, make_traces
 from benchmarks.common import (bench_index, bench_queries, emit, make_engine,
-                               write_csv)
+                               write_csv,
+                               summarize_rows, write_report)
 
 PAPER_H100_8B = {"hyde": 0.932, "subq": 0.791, "iter": 0.937, "irg": 0.591,
                  "flare": 0.878, "self_rag": 0.726}
@@ -49,6 +50,7 @@ def run(n_queries: int = 32, arch: str = "llama3-8b"):
         emit(f"hitrate/{pipe}", wall,
              f"hit={hr:.3f};budget_frac={frac:.3f}")
     write_csv("table3_hitrate", rows)
+    write_report("hitrate", metrics=summarize_rows(rows), rows=rows)
     return rows
 
 

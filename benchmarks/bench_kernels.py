@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.core.budget import TPU_V5E
 from repro.kernels import ops, ref
-from benchmarks.common import emit, write_csv
+from benchmarks.common import emit, write_csv, summarize_rows, write_report
 
 
 def run(P: int = 2048, ps: int = 128, d: int = 768, B: int = 8, k: int = 8):
@@ -60,6 +60,7 @@ def run(P: int = 2048, ps: int = 128, d: int = 768, B: int = 8, k: int = 8):
         "bound": "memory" if t_mem_fused > t_compute else "compute",
     }]
     write_csv("kernel_ivf_topk", rows)
+    write_report("kernels", metrics=summarize_rows(rows), rows=rows)
     emit("kernel/ivf_topk", wall * 1e6,
          f"fusion_gain={rows[0]['fusion_gain']};AI={rows[0]['arithmetic_intensity']}")
     rows += run_paged()
@@ -130,6 +131,7 @@ def run_paged(*, B: int = 2, KVH: int = 2, G: int = 2, Dh: int = 32,
         "parity": "ok",
     }]
     write_csv("kernel_paged", rows)
+    write_report("kernels_paged", metrics=summarize_rows(rows), rows=rows)
     emit("kernel/flash_decode_paged", wall_paged * 1e6, "parity=ok")
     emit("kernel/probe_and_topk", wall_fused * 1e6,
          f"bytes_removed={rows[0]['bytes_removed']}")

@@ -15,7 +15,8 @@ import repro.core as core
 from repro.serving import make_traces
 from benchmarks.common import (NPROBE, PAPER_CLUSTER_BYTES, bench_index,
                                bench_queries, emit, make_server,
-                               paper_scale_tcc, serve_requests, write_csv)
+                               paper_scale_tcc, serve_requests, write_csv,
+                               summarize_rows, write_report)
 
 PAPER_4090_3B = {"hyde": 1.3, "subq": 1.85, "iter": 1.4, "irg": 2.11,
                  "flare": 1.5, "self_rag": 1.35}
@@ -85,6 +86,7 @@ def run(n_queries: int = 16):
         emit(f"latency/{pipe}", wall,
              f"speedup={rows[-1]['speedup_vs_cpu']};paper~{PAPER_4090_3B[pipe]}")
     write_csv("fig9_latency", rows)
+    write_report("latency", metrics=summarize_rows(rows), rows=rows)
     return rows
 
 

@@ -10,7 +10,8 @@ import repro.core as core
 from repro.serving import EngineConfig, TeleRAGEngine
 from repro.configs import get_arch
 from benchmarks.common import (N_CLUSTERS, bench_index, bench_queries, emit,
-                               paper_scale_tcc, write_csv, PAPER_CLUSTER_BYTES)
+                               paper_scale_tcc, write_csv, PAPER_CLUSTER_BYTES,
+                               summarize_rows, write_report)
 
 
 def run(nprobes=(16, 32, 64, 128), budget_pages: int = 640,
@@ -42,6 +43,7 @@ def run(nprobes=(16, 32, 64, 128), budget_pages: int = 640,
         emit(f"nprobe/{np_}", t_tel * 1e6,
              f"speedup={rows[-1]['retrieval_speedup']};hit={res.hit_rate:.3f}")
     write_csv("fig15_nprobe", rows)
+    write_report("nprobe", metrics=summarize_rows(rows), rows=rows)
     return rows
 
 

@@ -15,9 +15,11 @@ import argparse
 import numpy as np
 
 from repro.core.schedulers import TeleRAGScheduler
+from repro.obs import analyze, write_trace
 from repro.serving import make_traces, summarize_latency
 from benchmarks.common import (bench_queries, emit, make_server,
-                               serve_requests, write_csv)
+                               serve_requests, write_csv,
+                               summarize_rows, write_report)
 
 
 def _run_load(n_requests, replicas, rate_rps, pipeline, micro_batch, seed):
@@ -43,9 +45,11 @@ def _run_load(n_requests, replicas, rate_rps, pipeline, micro_batch, seed):
 
 def run(n_requests: int = 48, replicas: int = 2,
         rates=(1.0, 100.0), pipeline: str = "hyde",
-        micro_batch: int = 4, seed: int = 61):
+        micro_batch: int = 4, seed: int = 61,
+        trace_out: str = None):
     rows = []
     mean_lats = []
+    srv = None
     for rate in rates:
         srv, resp = _run_load(n_requests, replicas, rate, pipeline,
                               micro_batch, seed)
@@ -71,6 +75,13 @@ def run(n_requests: int = 48, replicas: int = 2,
     if len(mean_lats) > 1:
         assert mean_lats[-1] >= mean_lats[0] - 1e-9, mean_lats
     write_csv("openloop_latency", rows)
+    write_report("openloop", metrics=summarize_rows(rows), rows=rows)
+    if trace_out and srv is not None:
+        # the last load point's full flight-recorder stream as
+        # Perfetto-loadable JSON (validated by tools/check_trace.py)
+        write_trace(srv.recorder, trace_out)
+        print(f"# trace: {trace_out} ({len(srv.recorder.events)} events)")
+        print(analyze(srv.recorder).summary())
     return rows
 
 
@@ -78,8 +89,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI guard: small fast open-loop pass")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the last load point's trace as "
+                         "Chrome/Perfetto trace-event JSON")
     args = ap.parse_args()
     if args.smoke:
-        run(n_requests=16, replicas=2)
+        run(n_requests=16, replicas=2, trace_out=args.trace_out)
     else:
-        run()
+        run(trace_out=args.trace_out)

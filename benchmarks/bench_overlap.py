@@ -11,7 +11,7 @@ import time
 import numpy as np
 
 import repro.core as core
-from benchmarks.common import NPROBE, bench_index, bench_queries, emit, write_csv
+from benchmarks.common import NPROBE, bench_index, bench_queries, emit, write_csv, summarize_rows, write_report
 
 # paper Table 1 (NQ row) for reference
 PAPER_NQ = {"hyde": 0.731, "subq": 0.632, "iter": 0.915, "irg": 0.838,
@@ -32,6 +32,7 @@ def run(n_queries: int = 256):
                      "in_band": abs(cov - PAPER_NQ[pipe]) < 0.12})
     wall = (time.time() - t0) / len(rows) * 1e6
     write_csv("table1_overlap", rows)
+    write_report("overlap", metrics=summarize_rows(rows), rows=rows)
     for r in rows:
         emit(f"overlap/{r['pipeline']}", wall,
              f"coverage={r['coverage']:.3f};paper={r['paper_nq']}")

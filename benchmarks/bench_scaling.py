@@ -15,7 +15,8 @@ from repro.serving import make_traces
 from repro.configs import get_arch
 from benchmarks.common import (NPROBE, N_CLUSTERS, bench_queries, emit,
                                make_server, serve_requests,
-                               slowest_replica_latency, write_csv)
+                               slowest_replica_latency, write_csv,
+                               summarize_rows, write_report)
 from benchmarks.bench_latency import modeled_latency
 
 
@@ -59,6 +60,7 @@ def run(replica_counts=(1, 2, 4, 8), global_batch: int = 32,
                  lat * 1e6 / global_batch,
                  f"qps={rows[-1]['qps']};scale={rows[-1]['scaling_vs_1']}")
     write_csv("fig11_13_scaling", rows)
+    write_report("scaling", metrics=summarize_rows(rows), rows=rows)
     return rows
 
 

@@ -10,7 +10,8 @@ from repro.core.schedulers import TeleRAGScheduler
 from repro.serving import make_traces
 from benchmarks.common import (NPROBE, N_CLUSTERS, bench_queries, emit,
                                make_server, serve_requests,
-                               slowest_replica_latency, write_csv)
+                               slowest_replica_latency, write_csv,
+                               summarize_rows, write_report)
 from benchmarks.bench_latency import modeled_latency
 
 
@@ -49,6 +50,7 @@ def run(global_batch: int = 32, micro_batch: int = 4, replicas: int = 4):
         emit(f"sched/{tag}", sched_s * 1e6,
              f"lat_ms={rows[-1]['latency_ms']};hit={rows[-1]['hit_rate']}")
     write_csv("fig14_sched", rows)
+    write_report("sched", metrics=summarize_rows(rows), rows=rows)
     return rows
 
 

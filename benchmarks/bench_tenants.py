@@ -32,7 +32,8 @@ from repro.configs import get_arch
 from repro.core.schedulers import EdfDispatch, FifoDispatch, TeleRAGScheduler
 from repro.serving import RagRequest, TeleRAGServer, make_traces
 from benchmarks.common import (bench_cfg, bench_index, bench_queries, emit,
-                               write_csv)
+                               write_csv,
+                               summarize_rows, write_report)
 
 
 def _server(dispatch, tenant_shares, replicas, micro_batch, seed):
@@ -122,6 +123,7 @@ def run(n_latency: int = 8, n_batch: int = 24, replicas: int = 2,
     # latency-sensitive tenant's miss rate worse than the mixed baseline
     assert miss_rate["slo"] <= miss_rate["fifo_baseline"] + 1e-12, miss_rate
     write_csv("tenant_slo", rows)
+    write_report("tenants", metrics=summarize_rows(rows), rows=rows)
     return rows
 
 

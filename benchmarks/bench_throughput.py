@@ -12,7 +12,8 @@ import numpy as np
 import repro.core as core
 from repro.serving import make_traces
 from benchmarks.common import (bench_index, bench_queries, emit, make_server,
-                               paper_scale_tcc, serve_requests, write_csv)
+                               paper_scale_tcc, serve_requests, write_csv,
+                               summarize_rows, write_report)
 from benchmarks.bench_latency import modeled_latency, PAPER_CLUSTER_BYTES
 
 
@@ -49,6 +50,7 @@ def run(batches=(1, 2, 4, 8), pipelines=("hyde", "subq", "irg")):
             emit(f"throughput/{pipe}/b{bs}", tele_lat * 1e6,
                  f"qps={rows[-1]['telerag_qps']};speedup={rows[-1]['speedup']}")
     write_csv("fig10_throughput", rows)
+    write_report("throughput", metrics=summarize_rows(rows), rows=rows)
     # Fig 12 check: speedup should not decrease with batch
     for pipe in pipelines:
         sp = [r["speedup"] for r in rows if r["pipeline"] == pipe]

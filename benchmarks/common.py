@@ -11,9 +11,11 @@ coverage, bytes moved, scheduling quality — are scale-honest).
 from __future__ import annotations
 
 import functools
+import json
 import os
+import platform
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -134,3 +136,79 @@ def write_csv(name: str, rows: List[Dict]) -> str:
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# Machine-readable bench reports (schema "telerag.bench/v1")
+# ---------------------------------------------------------------------------
+
+REPORT_SCHEMA = "telerag.bench/v1"
+_report_dir: Optional[str] = None
+
+
+def set_report_dir(path: Optional[str]) -> None:
+    """Redirect ``write_report`` output (``benchmarks/run.py
+    --report-dir``); None restores the default ``experiments/bench``."""
+    global _report_dir
+    _report_dir = path
+
+
+def validate_report(report: Dict) -> None:
+    """Schema guard for a ``telerag.bench/v1`` report (asserted by the
+    bench smokes and tests/test_obs.py so the emitted JSON stays
+    machine-consumable)."""
+    assert report.get("schema") == REPORT_SCHEMA, report.get("schema")
+    for key in ("bench", "host", "metrics", "rows"):
+        assert key in report, f"missing {key}"
+    assert isinstance(report["bench"], str) and report["bench"]
+    assert isinstance(report["metrics"], dict)
+    for k, v in report["metrics"].items():
+        assert isinstance(k, str)
+        assert isinstance(v, (int, float, str, bool)), (k, type(v))
+    assert isinstance(report["rows"], list)
+    for row in report["rows"]:
+        assert isinstance(row, dict)
+
+
+def summarize_rows(rows: List[Dict]) -> Dict:
+    """Headline metrics from a bench's row table: the mean of every
+    numeric column (``mean_<col>``) plus the row count — a uniform
+    machine-readable summary for ``write_report``."""
+    out: Dict = {"n_rows": len(rows)}
+    if not rows:
+        return out
+    for k in rows[0]:
+        vals = [r[k] for r in rows
+                if isinstance(r.get(k), (int, float))
+                and not isinstance(r.get(k), bool)]
+        if len(vals) == len(rows):
+            out[f"mean_{k}"] = float(np.mean(vals))
+    return out
+
+
+def write_report(name: str, *, metrics: Dict, rows: List[Dict] = (),
+                 meta: Optional[Dict] = None) -> str:
+    """Write one bench's machine-readable result as
+    ``BENCH_<name>.json`` (schema ``telerag.bench/v1``): ``metrics`` is
+    the bench's headline scalars, ``rows`` its per-configuration table
+    (usually the same rows as ``write_csv``), ``meta`` free-form
+    provenance.  Returns the path."""
+    report = {
+        "schema": REPORT_SCHEMA,
+        "bench": name,
+        "host": {"platform": platform.platform(),
+                 "python": platform.python_version()},
+        "metrics": {k: (float(v) if isinstance(v, (int, float))
+                        and not isinstance(v, bool) else v)
+                    for k, v in metrics.items()},
+        "rows": [dict(r) for r in rows],
+        "meta": dict(meta or {}),
+    }
+    validate_report(report)
+    out_dir = _report_dir or BENCH_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    print(f"# report: {path}")
+    return path

@@ -17,21 +17,32 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI guard: run a small fast subset at --quick "
                          "sizes so the perf scripts cannot silently rot")
+    ap.add_argument("--report-dir", default=None, metavar="DIR",
+                    help="directory for the machine-readable "
+                         "BENCH_<name>.json reports (default "
+                         "experiments/bench)")
     args = ap.parse_args()
     if args.smoke:
         args.quick = True
         if args.only is None:
-            args.only = ("overlap,sched,admission,openloop,tenants,"
-                         "continuous,decode_microbench")
+            args.only = ("overlap,overlap_trace,sched,admission,openloop,"
+                         "tenants,continuous,decode_microbench")
 
     from benchmarks import (bench_breakdown, bench_budget, bench_continuous,
                             bench_decode_microbench, bench_hitrate,
                             bench_kernels, bench_latency, bench_nprobe,
-                            bench_openloop, bench_overlap, bench_sched,
-                            bench_scaling, bench_tenants, bench_throughput)
+                            bench_openloop, bench_overlap,
+                            bench_overlap_trace, bench_sched, bench_scaling,
+                            bench_tenants, bench_throughput)
+    from benchmarks.common import set_report_dir
+
+    if args.report_dir:
+        set_report_dir(args.report_dir)
 
     benches = {
         "overlap": lambda: bench_overlap.run(64 if args.quick else 256),
+        "overlap_trace": lambda: bench_overlap_trace.run(
+            n_requests=12 if args.quick else 24),
         "hitrate": lambda: bench_hitrate.run(8 if args.quick else 32),
         "latency": lambda: bench_latency.run(4 if args.quick else 16),
         "throughput": lambda: bench_throughput.run(

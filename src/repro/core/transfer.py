@@ -28,6 +28,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.prefetch_buffer import PrefetchBuffer
 from repro.memory.pool import Reservation
+from repro.obs.recorder import FlightRecorder, TransferRecord
 
 
 @dataclass(frozen=True)
@@ -71,6 +72,9 @@ class TransferEngine:
         self.channel_free = [0.0] * channels
         self.events: List[TransferEvent] = []
         self._next_id = 0
+        # flight-recorder lane (attached by the owning engine/server)
+        self.recorder: Optional[FlightRecorder] = None
+        self.replica_id = -1
 
     # -- submission ---------------------------------------------------------
     def submit(self, clusters: Sequence[int], *, now: float = 0.0,
@@ -123,6 +127,17 @@ class TransferEngine:
         self._next_id += 1
         self.channel_free[ch] = ev.end_t
         self.events.append(ev)
+        if self.recorder is not None:
+            # issue at submit, land at the modeled completion (emitted
+            # now, stamped with its future clock time)
+            for when, k in ((ev.submit_t, "transfer.issue"),
+                            (ev.end_t, "transfer.land")):
+                self.recorder.emit(TransferRecord(
+                    t=when, kind=k, replica=self.replica_id,
+                    transfer_id=ev.transfer_id, nbytes=ev.nbytes,
+                    n_clusters=len(ev.clusters), channel=ev.channel,
+                    start_t=ev.start_t, end_t=ev.end_t,
+                    transfer_kind=ev.kind))
         return ev
 
     # -- queries ------------------------------------------------------------

@@ -35,6 +35,7 @@ import repro.core as core
 from repro.configs import get_arch
 from repro.launch import env as launch_env
 from repro.models import transformer as tf
+from repro.obs import analyze, write_trace
 from repro.serving import (DecodeEvent, EngineConfig, KVCacheManager,
                            RagRequest, TeleRAGServer, make_traces, sample,
                            summarize_latency)
@@ -53,6 +54,10 @@ def main():
     ap.add_argument("--static-groups", action="store_true",
                     help="legacy group-granular execution instead of "
                          "per-request continuous batching")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the run's flight-recorder stream as "
+                         "Chrome/Perfetto trace-event JSON (load in "
+                         "ui.perfetto.dev; see docs/OBSERVABILITY.md)")
     ap.add_argument("--print-env", action="store_true",
                     help="print the recommended launch environment "
                          "(tcmalloc preload, XLA flags) and exit")
@@ -139,6 +144,11 @@ def main():
           f"cache_hit={eng.cache.hit_rate:.0%}")
     print(f"# event-clock {summarize_latency(responses)}")
     print(srv.telemetry().summary())
+    print(analyze(srv.recorder).summary())
+    if args.trace_out:
+        write_trace(srv.recorder, args.trace_out)
+        print(f"# trace written to {args.trace_out} "
+              f"({len(srv.recorder.events)} events)")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.memory.pool import DevicePagePool, Reservation
+from repro.obs.recorder import AdmissionEvent, FlightRecorder
 
 
 @dataclass
@@ -101,6 +102,21 @@ class AdmissionController:
         self._ids = itertools.count()
         # parked waves: (key, pages_requested, tenant)
         self.parked: List[Tuple[object, int, str]] = []
+        # flight-recorder lane (attached by the owning engine/server);
+        # decisions are stamped at recorder.now — admit() takes no clock
+        self.recorder: Optional[FlightRecorder] = None
+        self.replica_id = -1
+
+    def _record(self, kind: str, owner: str, requested: int, granted: int,
+                tenant: str, *, wave_id: int = -1,
+                spilled: int = 0) -> None:
+        rec = self.recorder
+        if rec is not None:
+            rec.emit(AdmissionEvent(
+                t=rec.now, kind=kind, replica=self.replica_id,
+                tenant=tenant, wave_id=wave_id, owner=owner,
+                pages_requested=requested, pages_granted=granted,
+                spilled_pages=spilled))
 
     def _tstats(self, tenant: str) -> AdmissionStats:
         """The per-tenant stats slice (created on first touch)."""
@@ -110,11 +126,13 @@ class AdmissionController:
 
     # -- decision -----------------------------------------------------------
     def admit(self, npages: int, owner: str, *, can_wait: bool = True,
-              tenant: str = "shared") -> Optional[AdmissionTicket]:
+              tenant: str = "shared",
+              wave_id: int = -1) -> Optional[AdmissionTicket]:
         """Reserve ``npages`` of headroom for ``tenant``.  None = park
         and retry on a page-free event (only when ``can_wait`` and a
         future free is possible); otherwise the grant may be
-        spilled-into or capped."""
+        spilled-into or capped.  ``wave_id`` only correlates the
+        decision's trace event with the requesting wave."""
         npages = int(npages)
         tstats = self._tstats(tenant)
         res = self.pool.reserve(npages, owner, tenant=tenant)
@@ -127,6 +145,9 @@ class AdmissionController:
             self.stats.spilled_pages += spilled
             tstats.spilled_pages += spilled
             res = self.pool.reserve(npages, owner, tenant=tenant)
+            if spilled > 0:
+                self._record("admission.spill", owner, npages, 0, tenant,
+                             wave_id=wave_id, spilled=spilled)
         if res is None:
             # parking is only sound if a future free could EVER satisfy
             # the request — a plan above the tenant's reachable ceiling
@@ -136,6 +157,8 @@ class AdmissionController:
             if can_wait and reachable and self.holds_pending_release():
                 self.stats.stalled += 1
                 tstats.stalled += 1
+                self._record("admission.stall", owner, npages, 0, tenant,
+                             wave_id=wave_id)
                 return None
             granted = max(0, self.pool.reservable_pages_for(tenant))
             res = (self.pool.reserve(granted, owner, tenant=tenant)
@@ -144,6 +167,8 @@ class AdmissionController:
             tstats.capped += 1
             self.stats.shortfall_pages += npages - granted
             tstats.shortfall_pages += npages - granted
+            self._record("admission.cap", owner, npages, granted, tenant,
+                         wave_id=wave_id, spilled=spilled)
             return AdmissionTicket(
                 ticket_id=next(self._ids), owner=owner,
                 pages_requested=npages, pages_granted=granted,
@@ -151,6 +176,8 @@ class AdmissionController:
                 tenant=tenant)
         self.stats.admitted += 1
         tstats.admitted += 1
+        self._record("admission.admit", owner, npages, npages, tenant,
+                     wave_id=wave_id, spilled=spilled)
         return AdmissionTicket(
             ticket_id=next(self._ids), owner=owner, pages_requested=npages,
             pages_granted=npages, reservation=res, spilled_pages=spilled,
@@ -223,6 +250,7 @@ class AdmissionController:
         retry re-enters ``admit``, so order and fairness live there)."""
         out, self.parked = self.parked, []
         self.stats.resumed += len(out)
-        for _key, _npages, tenant in out:
+        for _key, npages, tenant in out:
             self._tstats(tenant).resumed += 1
+            self._record("admission.resume", "parked", npages, 0, tenant)
         return [(key, npages) for key, npages, _tenant in out]

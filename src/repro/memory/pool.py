@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.core.datastore import PagedClusters
 from repro.memory.ledger import MemoryLedger
+from repro.obs.recorder import FlightRecorder, PoolEvent
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
@@ -152,6 +153,22 @@ class DevicePagePool:
         self._tenant_held: Dict[str, int] = {}
         self._ids = itertools.count()
         self._subscribers: List[Callable[[int], None]] = []
+        # flight-recorder lane (attached by the owning engine/server);
+        # events are stamped at recorder.now — the pool has no clock
+        self.recorder: Optional[FlightRecorder] = None
+        self.replica_id = -1
+
+    def _record(self, kind: str, owner: str, pages: int, nbytes: int,
+                tenant: str) -> None:
+        """Emit one allocation edge with post-op free/occupancy (the
+        exporters' pool counter tracks read these)."""
+        rec = self.recorder
+        if rec is not None:
+            rec.emit(PoolEvent(
+                t=rec.now, kind=kind, replica=self.replica_id,
+                tenant=tenant, owner=owner, pages=pages, nbytes=nbytes,
+                free_pages=len(self.free),
+                occupancy=self.ledger.occupancy()))
 
     def _bump_tenant(self, tenant: str, delta: int) -> None:
         if delta:
@@ -361,6 +378,7 @@ class DevicePagePool:
         self.leases[lease.lease_id] = lease
         self._bump_tenant(tenant, npages)
         self.ledger.charge(owner, nb, tenant=tenant)
+        self._record("pool.lease", owner, npages, nb, tenant)
         return lease
 
     def lease_bytes(self, nbytes: int, owner: str = "kv", *,
@@ -393,6 +411,8 @@ class DevicePagePool:
         self.free.extend(lease.slots)
         self._bump_tenant(lease.tenant, -lease.num_pages)
         self.ledger.credit(lease.owner, lease.nbytes, tenant=lease.tenant)
+        self._record("pool.release", lease.owner, lease.num_pages,
+                     lease.nbytes, lease.tenant)
         self._notify_freed(lease.num_pages)
         return lease.num_pages
 

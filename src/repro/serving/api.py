@@ -56,8 +56,7 @@ from __future__ import annotations
 
 import itertools
 import time
-from dataclasses import (dataclass, field as dataclasses_field,
-                         replace as dc_replace)
+from dataclasses import dataclass, replace as dc_replace
 from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple)
 
 import numpy as np
@@ -67,6 +66,9 @@ from repro.core.ivf import IVFIndex, probe
 from repro.core.schedulers import (Assignment, DispatchPolicy, EdfDispatch,
                                    SchedulerPolicy)
 from repro.memory.admission import AdmissionStats
+from repro.obs import render as obs_render
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.recorder import CounterSample, FlightRecorder, RequestEvent
 from repro.serving.engine import (EngineConfig, RoundTelemetry,
                                   TeleRAGEngine)
 from repro.serving.runtime import (RequestRecord, RequestState,
@@ -261,18 +263,10 @@ class TenantTelemetry:
         return 1.0 - self.deadline_missed / self.with_deadline
 
     def line(self) -> str:
-        """One printable summary line for this tenant."""
-        return (f"tenant {self.tenant}: {self.completed} done "
-                f"p50={self.p50_latency_s*1e3:.1f}ms "
-                f"p99={self.p99_latency_s*1e3:.1f}ms "
-                f"queue_mean={self.mean_queue_s*1e3:.1f}ms "
-                f"attain={self.attainment:.0%} "
-                f"miss={self.deadline_missed} "
-                f"(queue {self.missed_in_queue} / "
-                f"service {self.missed_in_service}) "
-                f"stall={self.stall_s*1e3:.1f}ms "
-                f"demoted={self.demoted_rounds} "
-                f"kv={self.kv_bytes/1e6:.2f}MB")
+        """One printable summary line for this tenant (the shared
+        ``repro.obs.render`` formatter — same precision as replica
+        rows)."""
+        return obs_render.render_tenant_line(self)
 
 
 @dataclass(frozen=True)
@@ -330,29 +324,9 @@ class ServerTelemetry:
 
     def summary(self) -> str:
         """Multi-line printable snapshot: fleet totals, one line per
-        replica, one line per tenant."""
-        lines = [
-            f"server: {self.completed} completed / {self.waves} waves / "
-            f"{self.dispatched_batches} micro-batches, "
-            f"clock={self.clock_s*1e3:.1f}ms, "
-            f"h2d={self.bytes_h2d/1e6:.1f}MB, "
-            f"admission admitted={self.admission_admitted} "
-            f"stalled={self.admission_stalled} "
-            f"spilled_pages={self.spilled_pages}"]
-        for r in self.replicas:
-            led = r.ledger
-            lines.append(
-                f"  replica {r.replica}: h2d={r.bytes_h2d/1e6:.1f}MB "
-                f"cache_hit={r.cache_hit_rate:.0%} "
-                f"occ={r.occupancy:.1%} "
-                f"prefetch={led.get('prefetch', 0)/1e6:.2f}MB "
-                f"kv={led.get('kv', 0)/1e6:.2f}MB "
-                f"peak={led.get('peak', 0)/1e9:.2f}GB "
-                f"transfers={r.transfers} "
-                f"(queued {r.transfer_queued_s*1e3:.1f}ms)")
-        for t in self.tenants:
-            lines.append("  " + t.line())
-        return "\n".join(lines)
+        replica, one line per tenant — all through the shared
+        ``repro.obs.render`` formatters (one precision everywhere)."""
+        return obs_render.render_telemetry(self)
 
 
 @dataclass(frozen=True)
@@ -391,43 +365,54 @@ class _QueuedBatch:
     tenant: str = "shared"
 
 
-@dataclass
 class _TenantAcc:
-    """Running per-tenant SLO accumulator (folded into TenantTelemetry
-    at snapshot time)."""
+    """Per-tenant SLO accumulator backed by the server's metrics
+    registry: every field is a first-class instrument (counter or
+    histogram) keyed by tenant, and ``snapshot()`` is a *view* over
+    them — numerically identical to the pre-registry list/float
+    accumulator (``Histogram.percentile`` is ``np.percentile`` over
+    the raw latency samples; pinned by tests/test_obs.py)."""
 
-    latencies: List[float] = dataclasses_field(default_factory=list)
-    queue_s: float = 0.0
-    stall_s: float = 0.0
-    completed: int = 0
-    with_deadline: int = 0
-    missed: int = 0
-    missed_in_queue: int = 0
-    demoted_rounds: int = 0
+    def __init__(self, metrics: MetricsRegistry, tenant: str):
+        self.tenant = tenant
+        self._lat = metrics.histogram("request_latency_s", tenant=tenant)
+        self._queue_s = metrics.counter("request_queue_s", tenant=tenant)
+        self._stall_s = metrics.counter("request_stall_s", tenant=tenant)
+        self._completed = metrics.counter("requests_completed",
+                                          tenant=tenant)
+        self._with_deadline = metrics.counter("requests_with_deadline",
+                                              tenant=tenant)
+        self._missed = metrics.counter("deadline_missed", tenant=tenant)
+        self._missed_in_queue = metrics.counter("deadline_missed_in_queue",
+                                                tenant=tenant)
+        self._demoted = metrics.counter("demoted_rounds", tenant=tenant)
+
+    @property
+    def completed(self) -> int:
+        return int(self._completed.value)
 
     def note(self, r: "RagResponse") -> None:
-        self.latencies.append(r.latency_s)
-        self.queue_s += r.queue_s
-        self.stall_s += r.stall_s
-        self.completed += 1
-        self.demoted_rounds += r.demoted_rounds
+        self._lat.observe(r.latency_s)
+        self._queue_s.inc(r.queue_s)
+        self._stall_s.inc(r.stall_s)
+        self._completed.inc()
+        self._demoted.inc(r.demoted_rounds)
         if r.deadline_s is not None:
-            self.with_deadline += 1
-            self.missed += int(r.deadline_missed)
-            self.missed_in_queue += int(r.deadline_missed_in_queue)
+            self._with_deadline.inc()
+            self._missed.inc(int(r.deadline_missed))
+            self._missed_in_queue.inc(int(r.deadline_missed_in_queue))
 
     def snapshot(self, tenant: str, kv_bytes: int = 0) -> TenantTelemetry:
-        lats = np.asarray(self.latencies)
         return TenantTelemetry(
             tenant=tenant, completed=self.completed,
-            p50_latency_s=float(np.percentile(lats, 50)) if len(lats) else 0.0,
-            p99_latency_s=float(np.percentile(lats, 99)) if len(lats) else 0.0,
-            mean_queue_s=self.queue_s / max(1, self.completed),
-            stall_s=self.stall_s,
-            with_deadline=self.with_deadline,
-            deadline_missed=self.missed,
-            missed_in_queue=self.missed_in_queue,
-            demoted_rounds=self.demoted_rounds,
+            p50_latency_s=self._lat.percentile(50),
+            p99_latency_s=self._lat.percentile(99),
+            mean_queue_s=self._queue_s.value / max(1, self.completed),
+            stall_s=self._stall_s.value,
+            with_deadline=int(self._with_deadline.value),
+            deadline_missed=int(self._missed.value),
+            missed_in_queue=int(self._missed_in_queue.value),
+            demoted_rounds=int(self._demoted.value),
             kv_bytes=int(kv_bytes))
 
 
@@ -444,7 +429,8 @@ class TeleRAGServer:
                  batch_window_s: float = 0.0,
                  decode_hook: Optional[Callable] = None,
                  dispatch: Optional[DispatchPolicy] = None,
-                 continuous: bool = False):
+                 continuous: bool = False,
+                 trace: Optional[FlightRecorder] = None):
         """``scheduler=None`` forms FIFO micro-batches and routes them
         round-robin (persistent across waves); a ``SchedulerPolicy``
         enables the paper's similarity grouping + cache-aware routing.
@@ -476,8 +462,16 @@ class TeleRAGServer:
         self.index = index
         self.cfg = cfg
         self.continuous = bool(continuous)
+        # ONE flight recorder across the whole server: every replica's
+        # runtime, pool, admission controller, transfer engine and KV
+        # manager emits into the same stream, correlated by replica id
+        # (pass ``trace=`` to cap capacity or share a recorder)
+        self.recorder = trace if trace is not None else FlightRecorder()
+        self.metrics = MetricsRegistry()
         self.engines = [TeleRAGEngine(index, cfg, arch)
                         for _ in range(num_replicas)]
+        for i, eng in enumerate(self.engines):
+            eng.attach_recorder(self.recorder, i)
         # under continuous dispatch the runtime's wave former IS the
         # scheduler policy (its reform_wave hook); the static path keeps
         # runtimes scheduler-free because the server already grouped
@@ -511,9 +505,10 @@ class TeleRAGServer:
         self._busy = [False] * num_replicas
         self._rr = 0                       # round-robin cursor (no scheduler)
         self._global_now = 0.0
-        self._n_completed = 0
-        self._n_waves = 0
-        self._n_batches = 0
+        # lifetime counts live in the registry; telemetry() reads them
+        self._c_completed = self.metrics.counter("server_completed")
+        self._c_waves = self.metrics.counter("server_waves")
+        self._c_batches = self.metrics.counter("server_batches")
         self._tenant_acc: Dict[str, _TenantAcc] = {}
 
     # ---- replica health ----------------------------------------------------
@@ -560,6 +555,12 @@ class TeleRAGServer:
                         + [rt.now for rt in self.runtimes])
             for s in subs:
                 s.arrival_abs = epoch + max(0.0, float(s.request.arrival_t))
+                # server-side arrival mark: the analyzer's queue-time
+                # attribution reads submit -> (replica) admit
+                self.recorder.emit(RequestEvent(
+                    t=s.arrival_abs, kind="request", replica=-1,
+                    request_id=s.trace.request_id,
+                    tenant=s.request.tenant, label="submit"))
             waves = self._form_waves(subs)
             wi = 0
             while (wi < len(waves)
@@ -599,8 +600,9 @@ class TeleRAGServer:
         """One unified snapshot across every replica's counters, plus
         per-tenant SLO attainment accumulated over completed responses."""
         return ServerTelemetry(
-            completed=self._n_completed, waves=self._n_waves,
-            dispatched_batches=self._n_batches,
+            completed=int(self._c_completed.value),
+            waves=int(self._c_waves.value),
+            dispatched_batches=int(self._c_batches.value),
             clock_s=self._global_now,
             replicas=tuple(ReplicaTelemetry.capture(i, e)
                            for i, e in enumerate(self.engines)),
@@ -699,7 +701,12 @@ class TeleRAGServer:
                          for a in fixed],
             requeued=requeued,
             sched_overhead_s=time.perf_counter() - t0))
-        self._n_waves += 1
+        self._c_waves.inc()
+        # occupancy time series on the event clock: one sample per
+        # replica at every routed wave (what a control loop consumes)
+        for i, e in enumerate(self.engines):
+            self.metrics.series("ledger_occupancy", replica=i).sample(
+                wave_t, e.ledger.occupancy())
         touched = []
         for a in fixed:
             batch = [members[i] for i in groups[a.batch_index]]
@@ -713,6 +720,9 @@ class TeleRAGServer:
                 order=next(self._order), members=batch))
             touched.append(a.replica)
         for r in dict.fromkeys(touched):
+            self.recorder.emit(CounterSample(
+                t=wave_t, kind="counter", replica=r,
+                name="queue_depth", value=float(len(self._queues[r]))))
             self._maybe_dispatch(r)
 
     @staticmethod
@@ -752,7 +762,7 @@ class TeleRAGServer:
                                      priority=s.request.priority,
                                      deadline_t=self._deadline_abs(s))
             submitted = True
-            self._n_batches += 1
+            self._c_batches.inc()
             if not self.continuous:
                 rt.begin(rebase=False)
                 self._busy[r] = True
@@ -768,7 +778,7 @@ class TeleRAGServer:
         runtime — the dispatcher's unit of progress under per-request
         batching (the legacy path instead counts whole batch drains in
         ``_complete_batch``)."""
-        self._n_completed += 1
+        self._c_completed.inc()
 
     def _complete_batch(self, r: int) -> None:
         """A replica drained its in-flight work: consolidate the engine
@@ -778,7 +788,7 @@ class TeleRAGServer:
         only consolidates."""
         recs = self.runtimes[r].collect()
         if not self.continuous:
-            self._n_completed += len(recs)
+            self._c_completed.inc(len(recs))
         self._busy[r] = False
         self._maybe_dispatch(r)
 
@@ -803,5 +813,13 @@ class TeleRAGServer:
             tenant=s.request.tenant, priority=s.request.priority,
             deadline_s=s.request.deadline_s,
             demoted_rounds=rec.demoted_rounds)
-        self._tenant_acc.setdefault(s.request.tenant, _TenantAcc()).note(resp)
+        tenant = s.request.tenant
+        if tenant not in self._tenant_acc:
+            self._tenant_acc[tenant] = _TenantAcc(self.metrics, tenant)
+        self._tenant_acc[tenant].note(resp)
+        if s.request.deadline_s is not None:
+            # attainment time series: 1/0 per deadline-carrying response
+            # at its completion time (mean over a window = attainment)
+            self.metrics.series("attainment", tenant=tenant).sample(
+                rec.complete_t, 0.0 if missed else 1.0)
         return resp

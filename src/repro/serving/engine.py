@@ -42,6 +42,7 @@ from repro.core.prefetch_buffer import PrefetchBuffer
 from repro.core.transfer import TransferEngine, TransferEvent
 from repro.memory import (AdmissionController, AdmissionStats,
                           DevicePagePool, MemoryLedger)
+from repro.obs.recorder import FlightRecorder
 from repro.serving.policies import (LatencyContext, RetrievalPolicy,
                                     get_policy)
 
@@ -140,11 +141,30 @@ class TeleRAGEngine:
         self.index = index
         self.cfg = cfg
         self.arch = arch
+        # every engine records; a standalone engine owns its recorder,
+        # a server rebinds all replicas onto one shared stream
+        self.recorder = FlightRecorder()
+        self.replica_id = -1
         self._init_memory()
         self.transfer = TransferEngine(self.buffer, cfg.hw.host_link_bw)
         self.cache = ClusterCache(cfg.cache)
+        self._wire_recorder()
         self._rng = np.random.default_rng(cfg.seed)
         self._measured_tcc: Optional[float] = None
+
+    def _wire_recorder(self) -> None:
+        """Point every emitting component at the engine's recorder."""
+        for comp in (self.pool, self.admission, self.transfer):
+            comp.recorder = self.recorder
+            comp.replica_id = self.replica_id
+
+    def attach_recorder(self, recorder: FlightRecorder,
+                        replica: int = -1) -> None:
+        """Rebind onto a shared flight recorder (the server attaches one
+        recorder across all replicas, each with its lane id)."""
+        self.recorder = recorder
+        self.replica_id = replica
+        self._wire_recorder()
 
     def _init_memory(self) -> None:
         """One HBM arbiter per replica: page pool + byte ledger +
@@ -339,6 +359,9 @@ class TeleRAGEngine:
         self.pool.rebind_subscribers(old_pool)
         self.transfer = TransferEngine(self.buffer, self.cfg.hw.host_link_bw)
         self.cache = ClusterCache(self.cfg.cache)
+        # fresh pool/admission/transfer must keep emitting into the
+        # same trace stream across the restart
+        self._wire_recorder()
         self.buffer.load_clusters(snap["resident"])
         self.cache.hotness.update({int(k): v for k, v in
                                    snap["hotness"].items()})

@@ -44,6 +44,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.memory.pool import DevicePagePool, PageLease, PoolExhausted
 from repro.models import transformer as tf
+from repro.obs.recorder import KVEvent
 
 
 @dataclass
@@ -77,6 +78,16 @@ class KVCacheManager:
         self._pool_buckets: Dict[Tuple[int, int], Tuple[dict, Optional[PageLease]]] = {}
         self._nbytes_memo: Dict[Tuple[int, int], int] = {}
         self.slab: Optional["KVPageSlab"] = None   # init_paged() creates it
+
+    def _record(self, kind: str, batch: int, max_len: int, nbytes: int,
+                tenant: str) -> None:
+        """Trace through the pool's recorder lane (the manager has no
+        lane of its own — KV state belongs to the pool's replica)."""
+        rec = self.pool.recorder if self.pool is not None else None
+        if rec is not None:
+            rec.emit(KVEvent(t=rec.now, kind=kind,
+                             replica=self.pool.replica_id, tenant=tenant,
+                             batch=batch, max_len=max_len, nbytes=nbytes))
 
     def acquire(self, batch: int, max_len: int, *, fresh: bool = False,
                 tenant: str = "shared") -> CacheLease:
@@ -117,6 +128,7 @@ class KVCacheManager:
                 # attention caches are masked by pos so zeroing is
                 # optional
                 cache = jax.tree.map(lambda a: jnp.zeros_like(a), cache)
+        self._record("kv.acquire", batch, max_len, nbytes, tenant)
         return CacheLease(cache=cache, batch=batch, max_len=max_len,
                           nbytes=nbytes, page_lease=page_lease,
                           tenant=tenant)
@@ -124,6 +136,8 @@ class KVCacheManager:
     def release(self, lease: CacheLease) -> None:
         """Return the bucket for recycling (its pool lease stays live:
         the bytes remain resident until ``drop``/``drop_all``)."""
+        self._record("kv.release", lease.batch, lease.max_len,
+                     lease.nbytes, lease.tenant)
         self._pool_buckets[(lease.batch, lease.max_len)] = (lease.cache,
                                                             lease.page_lease)
 
@@ -219,6 +233,7 @@ class KVCacheManager:
                     f"reservable pages of {self.pool.page_nbytes} bytes")
         slots = [slab.free.pop() for _ in range(need)]
         bt = np.asarray(slots, np.int32).reshape(batch, max_blocks)
+        self._record("kv.acquire", batch, max_len, nbytes, tenant)
         return PagedCacheLease(block_table=bt,
                                lengths=np.zeros(batch, np.int32),
                                batch=batch, max_len=max_len, nbytes=nbytes,
@@ -250,6 +265,8 @@ class KVCacheManager:
         slab = self._require_slab()
         slab.free.extend(int(s) for s in lease.block_table.reshape(-1))
         lease.block_table = np.full_like(lease.block_table, -1)
+        self._record("kv.release", lease.batch, lease.max_len,
+                     lease.nbytes, lease.tenant)
         if lease.page_lease is not None and self.pool is not None:
             self.pool.release(lease.page_lease)
             lease.page_lease = None

@@ -75,6 +75,8 @@ import numpy as np
 
 from repro.core.embedder import synthetic_rewrite
 from repro.core.schedulers import SchedulerPolicy
+from repro.obs.recorder import (DecodeStep, FlightRecorder, RequestEvent,
+                                SpanEvent, WaveEvent)
 from repro.serving.engine import (RequestResult, RoundTelemetry,
                                   TeleRAGEngine)
 from repro.serving.policies import LatencyContext
@@ -100,9 +102,16 @@ class Span:
     end: float
     round_index: int = -1
 
-    def overlaps(self, lo: float, hi: float) -> bool:
-        """True iff this span intersects the open interval (lo, hi)."""
+    def intersects(self, lo: float, hi: float) -> bool:
+        """True iff this span intersects the open interval (lo, hi):
+        strict inequalities on both sides, so touching endpoints (and a
+        zero-length span AT an endpoint) do not count as overlap, while
+        a zero-length span strictly inside (lo, hi) does."""
         return self.start < hi and lo < self.end
+
+    def overlaps(self, lo: float, hi: float) -> bool:
+        """Back-compat alias for :meth:`intersects`."""
+        return self.intersects(lo, hi)
 
 
 @dataclass(frozen=True)
@@ -296,10 +305,48 @@ class RetrievalRuntime:
         self._batch: List[RequestRecord] = []
         self._ready: List[RequestRecord] = []
         self._retry_scheduled = False
-        self.event_log: List[Tuple[float, str, int]] = []
         self.wave_log: List[_Wave] = []
         # page-free events wake PRESSURE_STALLED requests
         engine.pool.subscribe(self._on_pages_freed)
+
+    # ---- flight recorder ---------------------------------------------------
+    @property
+    def recorder(self) -> FlightRecorder:
+        """The replica's trace stream (engine-owned; the server rebinds
+        every replica onto one shared recorder)."""
+        return self.engine.recorder
+
+    @property
+    def replica_id(self) -> int:
+        """This runtime's lane in the shared recorder (the engine's
+        replica id; -1 for a standalone engine)."""
+        return self.engine.replica_id
+
+    @property
+    def event_log(self) -> List[Tuple[float, str, int]]:
+        """Legacy view of the request-lifecycle stream: ``(t, label,
+        request_id)`` tuples in emission order, exactly what the old
+        ad-hoc list recorded.  The typed events are the source of
+        truth; this is a compatibility shim."""
+        return self.recorder.legacy_tuples(self.replica_id)
+
+    def _emit_req(self, t: float, label: str, rec: RequestRecord, *,
+                  round_index: int = -1, wave_id: int = -1) -> None:
+        """One request-lifecycle event into the flight recorder."""
+        self.recorder.emit(RequestEvent(
+            t=t, kind="request", replica=self.replica_id,
+            request_id=rec.request_id, tenant=rec.tenant,
+            wave_id=wave_id, label=label, round_index=round_index))
+
+    def _span(self, req: RequestRecord, kind: str, start: float,
+              end: float, rnd: int = -1, *, wave_id: int = -1) -> None:
+        """Append to the request's timeline AND trace the same interval
+        as a typed ``SpanEvent`` (the exporters' track content)."""
+        req.timeline.append(Span(kind, start, end, rnd))
+        self.recorder.emit(SpanEvent(
+            t=start, kind="span", replica=self.replica_id,
+            request_id=req.request_id, tenant=req.tenant, wave_id=wave_id,
+            name=kind, dur=end - start, round_index=rnd))
 
     @property
     def ctx(self) -> LatencyContext:
@@ -388,6 +435,9 @@ class RetrievalRuntime:
             return self._now
         t, _, kind, payload = heapq.heappop(self._heap)
         self._now = max(self._now, t)
+        # deep components (pool, admission, KV) stamp at recorder.now —
+        # the event loop owns the clock, so it advances it
+        self.recorder.tick(self._now)
         if kind == "admit":
             self._on_admit(t)
         elif kind == "round":
@@ -403,7 +453,7 @@ class RetrievalRuntime:
             rec, state, label = payload
             if state is not None:
                 rec.state = state
-            self.event_log.append((t, label, rec.request_id))
+            self._emit_req(t, label, rec)
             if state is RequestState.COMPLETE:
                 self._on_member_complete(rec, t)
         return self._now
@@ -433,8 +483,8 @@ class RetrievalRuntime:
         m.next_round = 0
         m.ready_t = now
         m.round_start = [now] + [float("nan")] * max(0, len(m.plan) - 1)
-        m.timeline.append(Span("admit", now, now))
-        self.event_log.append((now, "admit", m.request_id))
+        self._span(m, "admit", now, now)
+        self._emit_req(now, "admit", m)
 
     def _on_admit(self, now: float) -> None:
         ready = [r for r in self._pending if r.arrival_t <= now + 1e-12]
@@ -565,6 +615,10 @@ class RetrievalRuntime:
         policy = eng.policy
         members, rounds = wave.members, wave.rounds
         batch = len(members)
+        self.recorder.emit(WaveEvent(
+            t=now, kind="wave.form", replica=self.replica_id,
+            wave_id=wave.wid, tenant=wave.tenant, size=batch,
+            request_ids=wave.request_ids, rounds=tuple(rounds)))
         # members still retrieving vs. decode-only / tail-only members
         ret = [j for j in range(batch) if rounds[j] < len(members[j].plan)]
         gen_tokens = [
@@ -586,8 +640,8 @@ class RetrievalRuntime:
             for j in ret:
                 req = members[j]
                 req.demoted_rounds += 1
-                self.event_log.append((now, "prefetch_demoted",
-                                       req.request_id))
+                self._emit_req(now, "prefetch_demoted", req,
+                               round_index=rounds[j], wave_id=wave.wid)
 
         # 0) admission: the wave's lookahead plan reserves its headroom
         #    up front (ONE reservation aggregated over the wave); if the
@@ -625,7 +679,8 @@ class RetrievalRuntime:
             ticket = eng.admission.admit(plan.pages_planned,
                                          owner=f"w{wave.wid}",
                                          can_wait=waitable and not force,
-                                         tenant=wave.tenant)
+                                         tenant=wave.tenant,
+                                         wave_id=wave.wid)
             if ticket is None:
                 # a parked wave holds nothing: keeping tentative hit pins
                 # would make other parked waves mutually wait on them —
@@ -638,8 +693,8 @@ class RetrievalRuntime:
                 for j in ret:
                     req = members[j]
                     req.state = RequestState.PRESSURE_STALLED
-                    self.event_log.append((now, "pressure_stall",
-                                           req.request_id))
+                    self._emit_req(now, "pressure_stall", req,
+                                   wave_id=wave.wid)
                 # decode-only wave-mates need no pool pages: they must
                 # not be swallowed by the park — run them as their own
                 # wave right now (only dynamic waves mix tail members)
@@ -670,6 +725,12 @@ class RetrievalRuntime:
                 nbytes, nfetch, ev = eng.lookahead_ex(
                     act_q, [gen_tokens[j] for j in ret], now=now,
                     plan=plan, ticket=ticket)
+        self.recorder.emit(WaveEvent(
+            t=now, kind="wave.dispatch", replica=self.replica_id,
+            wave_id=wave.wid, tenant=wave.tenant, size=batch,
+            request_ids=wave.request_ids, rounds=tuple(rounds),
+            transfer_id=ev.transfer_id if ev is not None else -1,
+            nbytes=nbytes))
         if plan is not None:
             # each member owns its share of the fetched set too, until
             # its own completion event
@@ -722,6 +783,7 @@ class RetrievalRuntime:
         t_transfer = nbytes / eng.cfg.hw.host_link_bw
         mean_pages = float(np.mean(eng.index.paged.cluster_num_pages))
         continuing: List[float] = []
+        wave_end = now
         for j in range(batch):
             req, rnd, rs = members[j], rounds[j], starts[j]
             win = eng.llm_window_seconds(gen_tokens[j], batch)
@@ -729,19 +791,27 @@ class RetrievalRuntime:
                 # an event with no observed steps (the hook had nothing
                 # to decode for this member) keeps the modeled window
                 win = decode_evs[j].window(gen_tokens[j])
+            if decode_evs is not None:
+                self.recorder.emit(DecodeStep(
+                    t=rs, kind="decode", replica=self.replica_id,
+                    request_id=req.request_id, tenant=req.tenant,
+                    wave_id=wave.wid, tokens=decode_evs[j].tokens,
+                    seconds=decode_evs[j].seconds, batch=batch))
             if j not in ret:
                 # decode-only / tail-only member: its "round" is one
                 # generation window, then completion — the same wave
                 # machinery, no special-case branch
                 if win > 0:
-                    req.timeline.append(Span("generate_tail", rs, rs + win))
+                    self._span(req, "generate_tail", rs, rs + win,
+                               wave_id=wave.wid)
                     self._push(rs, "mark", (req, RequestState.GENERATING,
                                             "generate"))
                 req.complete_t = rs + win
-                req.timeline.append(
-                    Span("complete", req.complete_t, req.complete_t))
+                self._span(req, "complete", req.complete_t,
+                           req.complete_t)
                 self._push(req.complete_t, "mark",
                            (req, RequestState.COMPLETE, "complete"))
+                wave_end = max(wave_end, req.complete_t)
                 continue
             rows = [r for r, o in enumerate(owners) if o == j]
             hits = sum(len(res.hit_clusters[r]) for r in rows)
@@ -770,18 +840,21 @@ class RetrievalRuntime:
             rt.round_end_t = round_end
 
             if policy.prefetches and not demoted:
-                req.timeline.append(Span("prefetch_dispatch", rs, rs, rnd))
+                self._span(req, "prefetch_dispatch", rs, rs, rnd,
+                           wave_id=wave.wid)
                 self._push(rs, "mark",
                            (req, RequestState.PREFETCHING, "prefetch"))
-            req.timeline.append(Span("generate", rs, gen_end, rnd))
+            self._span(req, "generate", rs, gen_end, rnd,
+                       wave_id=wave.wid)
             self._push(rs, "mark", (req, RequestState.GENERATING, "generate"))
             if retrieve_start > gen_end:
-                req.timeline.append(
-                    Span("transfer_wait", gen_end, retrieve_start, rnd))
-            req.timeline.append(
-                Span("retrieve", retrieve_start, round_end, rnd))
+                self._span(req, "transfer_wait", gen_end, retrieve_start,
+                           rnd, wave_id=wave.wid)
+            self._span(req, "retrieve", retrieve_start, round_end, rnd,
+                       wave_id=wave.wid)
             self._push(retrieve_start, "mark",
                        (req, RequestState.RETRIEVING, "retrieve"))
+            wave_end = max(wave_end, round_end)
 
             req.next_round = rnd + 1
             if rnd + 1 < len(req.plan):
@@ -800,14 +873,23 @@ class RetrievalRuntime:
                         tail_s = decode_evs[j].window(
                             tail_gen_tokens(req.trace))
                     if tail_s > 0:
-                        req.timeline.append(
-                            Span("generate_tail", round_end,
-                                 round_end + tail_s, rnd))
+                        self._span(req, "generate_tail", round_end,
+                                   round_end + tail_s, rnd,
+                                   wave_id=wave.wid)
                     complete_t = round_end + tail_s
                 req.complete_t = complete_t
-                req.timeline.append(Span("complete", complete_t, complete_t))
+                self._span(req, "complete", complete_t, complete_t)
                 self._push(complete_t, "mark",
                            (req, RequestState.COMPLETE, "complete"))
+                wave_end = max(wave_end, complete_t)
+
+        # the wave's modeled footprint on the clock ends at its slowest
+        # member's round end (future-stamped; consumers sort by t)
+        self.recorder.emit(WaveEvent(
+            t=wave_end, kind="wave.complete", replica=self.replica_id,
+            wave_id=wave.wid, tenant=wave.tenant, size=batch,
+            request_ids=wave.request_ids, rounds=tuple(rounds),
+            nbytes=nbytes))
 
         # 5) next round's query drifts from this round's rewrite
         for j in ret:
@@ -845,12 +927,11 @@ class RetrievalRuntime:
                         continue
                     rs = m.ready_t
                     if now > rs + 1e-15:
-                        m.timeline.append(
-                            Span("pressure_stall", rs, now, key.rounds[j]))
+                        self._span(m, "pressure_stall", rs, now,
+                                   key.rounds[j], wave_id=key.wid)
                     m.ready_t = now
                     m.state = RequestState.ADMITTED
-                    self.event_log.append((now, "pressure_resume",
-                                           m.request_id))
+                    self._emit_req(now, "pressure_resume", m)
                     self._ready.append(m)
                     woke_ready = True
             else:
@@ -860,12 +941,10 @@ class RetrievalRuntime:
                         continue
                     rs = m.round_start[rnd]
                     if now > rs + 1e-15:
-                        m.timeline.append(Span("pressure_stall", rs, now,
-                                               rnd))
+                        self._span(m, "pressure_stall", rs, now, rnd)
                         m.round_start[rnd] = now
                     m.state = RequestState.ADMITTED
-                    self.event_log.append((now, "pressure_resume",
-                                           m.request_id))
+                    self._emit_req(now, "pressure_resume", m)
                 self._push(now, "round", (g, rnd, force))
         if woke_ready:
             self._push(now, "frontier", (force,))

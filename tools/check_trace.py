@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Validate a Chrome/Perfetto trace-event JSON file emitted by
+``repro.obs.export.write_trace`` (CI runs this on the openloop smoke
+trace so the exporter cannot silently drift from the format
+ui.perfetto.dev loads; format documented in docs/OBSERVABILITY.md).
+
+Checks, beyond JSON well-formedness:
+
+* top level is ``{"traceEvents": [...]}``;
+* every event has a phase ``ph`` and a ``pid``, with ``ts >= 0`` on
+  timed phases;
+* complete spans (``"X"``) have non-negative ``dur``;
+* async begin/end pairs (``"b"``/``"e"``) balance per (cat, id);
+* counter events (``"C"``) exist and include the ledger-occupancy and
+  pool-free-pages tracks the acceptance criteria require.
+
+Usage:  python tools/check_trace.py experiments/bench/openloop_trace.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, Tuple
+
+# phases that must carry a timestamp
+_TIMED = {"X", "B", "E", "b", "e", "i", "C"}
+
+# counter tracks write_trace always emits on a served run
+REQUIRED_COUNTERS = {"ledger_occupancy", "pool_free_pages"}
+
+
+def validate_trace(doc: Dict) -> Dict[str, int]:
+    """Assert ``doc`` is a loadable trace; returns phase counts."""
+    assert isinstance(doc, dict), type(doc)
+    events = doc.get("traceEvents")
+    assert isinstance(events, list), "missing traceEvents list"
+    assert events, "empty traceEvents"
+
+    phases: Dict[str, int] = {}
+    async_open: Dict[Tuple[str, object], int] = {}
+    counters = set()
+    for i, ev in enumerate(events):
+        assert isinstance(ev, dict), (i, ev)
+        ph = ev.get("ph")
+        assert isinstance(ph, str) and ph, f"event {i} missing ph: {ev}"
+        assert "pid" in ev, f"event {i} missing pid: {ev}"
+        phases[ph] = phases.get(ph, 0) + 1
+        if ph in _TIMED:
+            ts = ev.get("ts")
+            assert isinstance(ts, (int, float)) and ts >= -1e-9, \
+                f"event {i} bad ts: {ev}"
+        if ph == "X":
+            dur = ev.get("dur")
+            assert isinstance(dur, (int, float)) and dur >= -1e-9, \
+                f"event {i} bad dur: {ev}"
+        elif ph in ("b", "e"):
+            key = (ev.get("cat"), ev.get("id"))
+            assert key[1] is not None, f"async event {i} missing id: {ev}"
+            async_open[key] = async_open.get(key, 0) + (1 if ph == "b" else -1)
+        elif ph == "C":
+            assert isinstance(ev.get("args"), dict) and ev["args"], \
+                f"counter event {i} missing args: {ev}"
+            counters.add(ev.get("name"))
+
+    unbalanced = {k: v for k, v in async_open.items() if v != 0}
+    assert not unbalanced, f"unbalanced async spans: {unbalanced}"
+    missing = REQUIRED_COUNTERS - counters
+    assert not missing, \
+        f"missing required counter tracks: {sorted(missing)} " \
+        f"(have {sorted(counters)})"
+    return phases
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        doc = json.load(f)
+    phases = validate_trace(doc)
+    total = sum(phases.values())
+    print(f"OK {argv[1]}: {total} events "
+          + " ".join(f"{ph}={n}" for ph, n in sorted(phases.items())))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
