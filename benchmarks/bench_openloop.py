@@ -14,8 +14,10 @@ import argparse
 
 import numpy as np
 
+import os
+
 from repro.core.schedulers import TeleRAGScheduler
-from repro.obs import analyze, write_trace
+from repro.obs import analyze, write_jsonl, write_trace
 from repro.serving import make_traces, summarize_latency
 from benchmarks.common import (bench_queries, emit, make_server,
                                serve_requests, write_csv,
@@ -79,7 +81,10 @@ def run(n_requests: int = 48, replicas: int = 2,
     if trace_out and srv is not None:
         # the last load point's full flight-recorder stream as
         # Perfetto-loadable JSON (validated by tools/check_trace.py)
+        # plus the lossless JSONL sibling the happens-before invariant
+        # checker replays (tools/telint.py --trace)
         write_trace(srv.recorder, trace_out)
+        write_jsonl(srv.recorder, os.path.splitext(trace_out)[0] + ".jsonl")
         print(f"# trace: {trace_out} ({len(srv.recorder.events)} events)")
         print(analyze(srv.recorder).summary())
     return rows

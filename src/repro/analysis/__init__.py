@@ -1,0 +1,30 @@
+"""telint: repo-specific static lint + dynamic trace invariant checking.
+
+Two coordinated halves guard the discipline TeleRAG's correctness
+rides on (docs/ANALYSIS.md):
+
+* ``lint`` — AST rules TL001–TL005 over ``src/repro`` (lease leaks,
+  wall-clock reads outside the event clock, kernel-mode literals at
+  call sites, dropped tenant threading, swallowed ``PoolExhausted``),
+  ratcheted against ``analysis/baseline.json`` in CI.
+* ``invariants`` — replays a ``FlightRecorder`` stream and checks the
+  happens-before partial orders (transfer issue→land→use,
+  admission→dispatch, lease→release, kv-acquire→decode→kv-release)
+  plus conservation (no double release, no negative outstanding
+  pages/bytes, leases drained at end of run).
+
+``lint`` is stdlib-only on purpose: CI's ratchet step must not need
+jax/numpy installed.
+"""
+
+from repro.analysis.lint import LintViolation, lint_paths, lint_source
+from repro.analysis.invariants import (InvariantReport, InvariantViolation,
+                                       check_events, check_recorder,
+                                       events_from_jsonl,
+                                       events_from_perfetto)
+
+__all__ = [
+    "LintViolation", "lint_paths", "lint_source",
+    "InvariantReport", "InvariantViolation", "check_events",
+    "check_recorder", "events_from_jsonl", "events_from_perfetto",
+]

@@ -35,7 +35,7 @@ import repro.core as core
 from repro.configs import get_arch
 from repro.launch import env as launch_env
 from repro.models import transformer as tf
-from repro.obs import analyze, write_trace
+from repro.obs import SystemClock, analyze, write_jsonl, write_trace
 from repro.serving import (DecodeEvent, EngineConfig, KVCacheManager,
                            RagRequest, TeleRAGServer, make_traces, sample,
                            summarize_latency)
@@ -93,30 +93,39 @@ def main():
         n = len(records)
         steps = min(max(gen_tokens, default=0), 32)
         lease = kv.acquire(n, 128, fresh=True, tenant=records[0].tenant)
-        tok = jnp.zeros((n,), jnp.int32)
-        t0 = time.perf_counter()
-        logits = None
-        for t in range(steps):
-            logits, lease.cache = step(params, lease.cache,
-                                       {"token": tok,
-                                        "pos": jnp.full((n,), t, jnp.int32)})
-            tok = sample(logits)
-        if logits is not None:
-            jax.block_until_ready(tok)
-        per_step = (time.perf_counter() - t0) / max(steps, 1)
-        kv.release(lease)
+        try:
+            tok = jnp.zeros((n,), jnp.int32)
+            t0 = time.perf_counter()
+            logits = None
+            for t in range(steps):
+                logits, lease.cache = step(
+                    params, lease.cache,
+                    {"token": tok,
+                     "pos": jnp.full((n,), t, jnp.int32)})
+                tok = sample(logits)
+            if logits is not None:
+                jax.block_until_ready(tok)
+            per_step = (time.perf_counter() - t0) / max(steps, 1)
+        finally:
+            # a raising decode step must still hand the bucket back for
+            # recycling — leaked KV leases shrink the shared pool until
+            # admission starves (telint TL001)
+            kv.release(lease)
         return [DecodeEvent(request_id=r.request_id,
                             tokens=min(g, steps) if g else 0,
                             seconds=per_step * (min(g, steps) if g else 0))
                 for r, g in zip(records, gen_tokens)]
 
+    # real serving driver: inject the REAL wall clock — scheduler
+    # overhead and t_cc calibration should measure this machine here
+    # (library default is the deterministic event clock)
     srv = TeleRAGServer(index, EngineConfig(
         nprobe=args.nprobe, top_k=3, buffer_pages=512,
         pool_pages=512 + -(-kv_bytes // page_bytes),
         lookahead_rank=min(2 * args.nprobe, args.clusters),
         kernel_mode="ref", cache_enabled=True, chips=4), 1, arch_full,
         micro_batch=args.batch, include_tail=True, decode_hook=decode_hook,
-        continuous=not args.static_groups)
+        continuous=not args.static_groups, wall_clock=SystemClock())
     eng = srv.engines[0]
     kv = KVCacheManager(cfg, pool=eng.pool)
     eng.calibrate_tcc()
@@ -147,8 +156,13 @@ def main():
     print(analyze(srv.recorder).summary())
     if args.trace_out:
         write_trace(srv.recorder, args.trace_out)
-        print(f"# trace written to {args.trace_out} "
-              f"({len(srv.recorder.events)} events)")
+        # the lossless sibling stream: what tools/telint.py --trace and
+        # tools/check_trace.py replay for happens-before invariants
+        import os
+        jl = os.path.splitext(args.trace_out)[0] + ".jsonl"
+        write_jsonl(srv.recorder, jl)
+        print(f"# trace written to {args.trace_out} (+ {jl}; "
+              f"{len(srv.recorder.events)} events)")
 
 
 if __name__ == "__main__":

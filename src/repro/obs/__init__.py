@@ -13,6 +13,7 @@ depend on the recorder, never the other way around.
 """
 
 from repro.obs.analyze import OverlapReport, OverlapRound, analyze
+from repro.obs.clock import SYSTEM_CLOCK, EventClock, SystemClock
 from repro.obs.export import to_jsonl, to_perfetto, write_jsonl, write_trace
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                TimeSeries)
@@ -25,6 +26,7 @@ from repro.obs.render import (render_replica_line, render_telemetry,
 
 __all__ = [
     "AdmissionEvent", "analyze", "Counter", "CounterSample", "DecodeStep",
+    "EventClock", "SYSTEM_CLOCK", "SystemClock",
     "FlightRecorder", "Gauge", "Histogram", "KVEvent", "LEGACY_LABELS",
     "MetricsRegistry", "OverlapReport", "OverlapRound", "PoolEvent",
     "RequestEvent", "render_replica_line", "render_telemetry",

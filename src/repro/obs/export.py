@@ -118,13 +118,19 @@ def to_perfetto(rec: FlightRecorder) -> Dict[str, object]:
             out.append({"ph": "C", "name": ev.name, "pid": pid, "ts": ts,
                         "args": {"value": ev.value}})
         elif ev.kind.startswith("wave."):
+            # transfer_id / request_ids make the instant replayable by
+            # the happens-before checker (repro.analysis.invariants)
             out.append({"ph": "i", "name": ev.kind, "pid": pid,
                         "tid": _LANES["retrieval"], "ts": ts, "s": "t",
-                        "args": {"wave_id": ev.wave_id, "size": ev.size}})
+                        "args": {"wave_id": ev.wave_id, "size": ev.size,
+                                 "transfer_id": ev.transfer_id,
+                                 "nbytes": ev.nbytes,
+                                 "request_ids": list(ev.request_ids)}})
         elif ev.kind.startswith("admission."):
             out.append({"ph": "i", "name": ev.kind, "pid": pid,
                         "tid": _LANES["admission"], "ts": ts, "s": "t",
                         "args": {"owner": ev.owner,
+                                 "wave_id": ev.wave_id,
                                  "pages_requested": ev.pages_requested,
                                  "pages_granted": ev.pages_granted}})
         elif ev.kind == "decode":

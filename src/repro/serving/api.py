@@ -55,7 +55,6 @@ serving").
 from __future__ import annotations
 
 import itertools
-import time
 from dataclasses import dataclass, replace as dc_replace
 from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple)
 
@@ -67,6 +66,7 @@ from repro.core.schedulers import (Assignment, DispatchPolicy, EdfDispatch,
                                    SchedulerPolicy)
 from repro.memory.admission import AdmissionStats
 from repro.obs import render as obs_render
+from repro.obs.clock import EventClock
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.recorder import CounterSample, FlightRecorder, RequestEvent
 from repro.serving.engine import (EngineConfig, RoundTelemetry,
@@ -430,7 +430,8 @@ class TeleRAGServer:
                  decode_hook: Optional[Callable] = None,
                  dispatch: Optional[DispatchPolicy] = None,
                  continuous: bool = False,
-                 trace: Optional[FlightRecorder] = None):
+                 trace: Optional[FlightRecorder] = None,
+                 wall_clock=None):
         """``scheduler=None`` forms FIFO micro-batches and routes them
         round-robin (persistent across waves); a ``SchedulerPolicy``
         enables the paper's similarity grouping + cache-aware routing.
@@ -458,7 +459,14 @@ class TeleRAGServer:
         ``continuous=False`` (the default) keeps the legacy
         group-granular execution that the deprecated shims are pinned
         against: one micro-batch in flight per replica, ``end_batch``
-        consolidation between batches."""
+        consolidation between batches.
+
+        ``wall_clock`` is the injected real-time source for the few
+        measurements that are genuinely about THIS machine (scheduler
+        overhead, host-search calibration).  The default is the
+        deterministic ``obs.clock.EventClock`` — identical inputs give
+        identical traces; launch drivers that want real measurement
+        pass ``obs.clock.SystemClock()``."""
         self.index = index
         self.cfg = cfg
         self.continuous = bool(continuous)
@@ -467,8 +475,11 @@ class TeleRAGServer:
         # manager emits into the same stream, correlated by replica id
         # (pass ``trace=`` to cap capacity or share a recorder)
         self.recorder = trace if trace is not None else FlightRecorder()
+        self.wall = wall_clock if wall_clock is not None \
+            else EventClock(self.recorder)
         self.metrics = MetricsRegistry()
-        self.engines = [TeleRAGEngine(index, cfg, arch)
+        self.engines = [TeleRAGEngine(index, cfg, arch,
+                                      wall_clock=self.wall)
                         for _ in range(num_replicas)]
         for i, eng in enumerate(self.engines):
             eng.attach_recorder(self.recorder, i)
@@ -641,7 +652,7 @@ class TeleRAGServer:
         within each tenant's slice of the wave, so admission
         reservations and ledger attribution are well-defined per batch
         (a single-tenant wave reduces to the legacy grouping exactly)."""
-        t0 = time.perf_counter()
+        t0 = self.wall.perf()
         q = np.stack([np.asarray(s.request.q) for s in members])
         mb = self.micro_batch or len(members)
         by_tenant: Dict[str, List[int]] = {}
@@ -700,7 +711,7 @@ class TeleRAGServer:
             assignments=[(a.batch_index, a.replica, a.overlap)
                          for a in fixed],
             requeued=requeued,
-            sched_overhead_s=time.perf_counter() - t0))
+            sched_overhead_s=self.wall.perf() - t0))
         self._c_waves.inc()
         # occupancy time series on the event clock: one sample per
         # replica at every routed wave (what a control loop consumes)

@@ -25,7 +25,6 @@ host search, whose per-cluster cost t_cc can be measured and plugged in.
 from __future__ import annotations
 
 import dataclasses
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -42,6 +41,7 @@ from repro.core.prefetch_buffer import PrefetchBuffer
 from repro.core.transfer import TransferEngine, TransferEvent
 from repro.memory import (AdmissionController, AdmissionStats,
                           DevicePagePool, MemoryLedger)
+from repro.obs.clock import EventClock
 from repro.obs.recorder import FlightRecorder
 from repro.serving.policies import (LatencyContext, RetrievalPolicy,
                                     get_policy)
@@ -137,7 +137,8 @@ class TeleRAGEngine:
     """Single-replica engine: prefetch buffer + cache + hybrid retrieval."""
 
     def __init__(self, index: IVFIndex, cfg: EngineConfig,
-                 arch: Optional[ArchConfig] = None):
+                 arch: Optional[ArchConfig] = None, *,
+                 wall_clock=None):
         self.index = index
         self.cfg = cfg
         self.arch = arch
@@ -145,6 +146,11 @@ class TeleRAGEngine:
         # a server rebinds all replicas onto one shared stream
         self.recorder = FlightRecorder()
         self.replica_id = -1
+        # wall-clock discipline: real time is an injected dependency
+        # (launch drivers pass obs.clock.SystemClock); the default
+        # EventClock keeps runs replay-deterministic
+        self.wall = wall_clock if wall_clock is not None \
+            else EventClock(self.recorder)
         self._init_memory()
         self.transfer = TransferEngine(self.buffer, cfg.hw.host_link_bw)
         self.cache = ClusterCache(cfg.cache)
@@ -164,6 +170,8 @@ class TeleRAGEngine:
         recorder across all replicas, each with its lane id)."""
         self.recorder = recorder
         self.replica_id = replica
+        if isinstance(self.wall, EventClock):
+            self.wall.recorder = recorder
         self._wire_recorder()
 
     def _init_memory(self) -> None:
@@ -229,12 +237,21 @@ class TeleRAGEngine:
                                                       self.cfg.hw)
 
     def calibrate_tcc(self, n_clusters: int = 16) -> float:
-        """Measure real host per-cluster search cost on this machine."""
+        """Measure real host per-cluster search cost on this machine
+        via the injected wall clock.  Under the default deterministic
+        ``EventClock`` the bracketing reads are equal, so the modeled
+        per-cluster cost is stored instead — calibration is then a
+        deterministic no-op rather than a zero that would erase host
+        search time from every latency model downstream."""
         q = self._rng.standard_normal(self.index.dim).astype(np.float32)
         cs = list(range(min(n_clusters, self.index.num_clusters)))
-        t0 = time.perf_counter()
+        t0 = self.wall.perf()
         host_search(self.index.paged, cs, q, k=8)
-        self._measured_tcc = (time.perf_counter() - t0) / len(cs)
+        elapsed = self.wall.perf() - t0
+        if elapsed > 0.0:
+            self._measured_tcc = elapsed / len(cs)
+        else:
+            self._measured_tcc = self.effective_tcc()
         return self._measured_tcc
 
     # ---- timing primitives --------------------------------------------------

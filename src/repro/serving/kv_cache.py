@@ -116,7 +116,15 @@ class KVCacheManager:
                         f"kv cache {key} needs {nbytes} bytes; pool has "
                         f"{self.pool.reservable_pages()} reservable pages "
                         f"of {self.pool.page_nbytes} bytes")
-            cache = tf.init_cache(self.cfg, batch, max_len, self.dtype)
+            try:
+                cache = tf.init_cache(self.cfg, batch, max_len, self.dtype)
+            except BaseException:
+                # a failed allocation must hand its pool pages back —
+                # otherwise every OOM here shrinks the pool forever
+                # (telint TL001)
+                if page_lease is not None and self.pool is not None:
+                    self.pool.release(page_lease)
+                raise
         else:
             if (page_lease is not None and self.pool is not None
                     and page_lease.tenant != tenant):

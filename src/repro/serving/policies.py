@@ -194,24 +194,29 @@ class TeleRAGPolicy(RetrievalPolicy):
             plan = self.plan(engine, q_in, gen_tokens,
                              free_pages=ticket.pages_granted,
                              ranked=plan.ranked)
-        if plan.fetch:
-            # the dispatch-time fallback eviction must honor tenant
-            # floors exactly like the admission spill does — otherwise
-            # a full buffer at transfer time would let this wave dig
-            # another tenant below its guaranteed floor
-            protect = engine.admission.spill_protect(ticket.tenant)
-            ev = engine.transfer.submit(
-                plan.fetch, now=now, nbytes=plan.bytes_planned,
-                reservation=ticket.reservation,
-                make_room=lambda pages: engine.cache.make_room(
-                    engine.buffer, pages, protect=protect))
-        else:
-            # nothing to move: no link event (a 0-byte event could still
-            # inherit a channel-queue wait), but fold any queued device
-            # invalidations exactly as the legacy load path did
-            engine.buffer.load_clusters([])
-            ev = None
-        engine.admission.commit(ticket)
+        try:
+            if plan.fetch:
+                # the dispatch-time fallback eviction must honor tenant
+                # floors exactly like the admission spill does — otherwise
+                # a full buffer at transfer time would let this wave dig
+                # another tenant below its guaranteed floor
+                protect = engine.admission.spill_protect(ticket.tenant)
+                ev = engine.transfer.submit(
+                    plan.fetch, now=now, nbytes=plan.bytes_planned,
+                    reservation=ticket.reservation,
+                    make_room=lambda pages: engine.cache.make_room(
+                        engine.buffer, pages, protect=protect))
+            else:
+                # nothing to move: no link event (a 0-byte event could
+                # still inherit a channel-queue wait), but fold any queued
+                # device invalidations exactly as the legacy load path did
+                engine.buffer.load_clusters([])
+                ev = None
+        finally:
+            # ALWAYS return the reservation's unconsumed remainder — a
+            # transfer that raises mid-submit must not leave reserved
+            # pages stranded until the pool is rebuilt (telint TL001)
+            engine.admission.commit(ticket)
         # only clusters that actually landed become cache-tracked — a
         # rejected cluster must not leak a hotness entry
         engine.cache.on_fetched(

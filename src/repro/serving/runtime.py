@@ -713,71 +713,93 @@ class RetrievalRuntime:
         # they eventually ride
         self.wave_log.append(wave)
 
-        # 1) lookahead prefetch keyed on the *current* queries, dispatched
-        #    (async) at the frontier — in flight during generation.  A
-        #    demoted round moves nothing (it only flushes any queued
-        #    device invalidations so the search LUT stays consistent).
-        nbytes, nfetch, ev = 0, 0, None
-        if ret and policy.prefetches:
-            if demoted:
-                eng.buffer.flush_invalidations()
-            else:
-                nbytes, nfetch, ev = eng.lookahead_ex(
-                    act_q, [gen_tokens[j] for j in ret], now=now,
-                    plan=plan, ticket=ticket)
-        self.recorder.emit(WaveEvent(
-            t=now, kind="wave.dispatch", replica=self.replica_id,
-            wave_id=wave.wid, tenant=wave.tenant, size=batch,
-            request_ids=wave.request_ids, rounds=tuple(rounds),
-            transfer_id=ev.transfer_id if ev is not None else -1,
-            nbytes=nbytes))
-        if plan is not None:
-            # each member owns its share of the fetched set too, until
-            # its own completion event
-            for m, cs in zip(keys, fetch_sets):
-                eng.buffer.pin_clusters(m, cs)
+        # steps 1-3 run under a release-on-exception guard: a raising
+        # decode hook / transfer / retrieval must not strand the wave's
+        # cluster pins or its admission reservation — the members never
+        # reach their completion events (the normal release point), so
+        # without the cleanup the pool shrinks forever (telint TL001;
+        # regression: tests/test_analysis.py)
+        try:
+            # 1) lookahead prefetch keyed on the *current* queries,
+            #    dispatched (async) at the frontier — in flight during
+            #    generation.  A demoted round moves nothing (it only
+            #    flushes queued device invalidations so the search LUT
+            #    stays consistent).
+            nbytes, nfetch, ev = 0, 0, None
+            if ret and policy.prefetches:
+                if demoted:
+                    eng.buffer.flush_invalidations()
+                else:
+                    nbytes, nfetch, ev = eng.lookahead_ex(
+                        act_q, [gen_tokens[j] for j in ret], now=now,
+                        plan=plan, ticket=ticket)
+            self.recorder.emit(WaveEvent(
+                t=now, kind="wave.dispatch", replica=self.replica_id,
+                wave_id=wave.wid, tenant=wave.tenant, size=batch,
+                request_ids=wave.request_ids, rounds=tuple(rounds),
+                transfer_id=ev.transfer_id if ev is not None else -1,
+                nbytes=nbytes))
+            if plan is not None:
+                # each member owns its share of the fetched set too,
+                # until its own completion event
+                for m, cs in zip(keys, fetch_sets):
+                    eng.buffer.pin_clusters(m, cs)
 
-        # 1b) real decode (serve drivers): the copy dispatched above is
-        #     in flight while the hook's device steps run; observed
-        #     per-request DecodeEvents replace the modeled windows
-        decode_evs: Optional[List[DecodeEvent]] = None
-        if self.on_generate is not None and (ret or any(gen_tokens)):
-            evs = self.on_generate(list(members), list(gen_tokens),
-                                   rounds[0])
-            if evs is not None:
-                if len(evs) != batch:
-                    raise ValueError(
-                        f"decode hook returned {len(evs)} events for a "
-                        f"wave of {batch}")
-                # match by request id, not position: a hook returning
-                # events in any order must not cross-wire the windows
-                by_id = {e.request_id: e for e in evs}
-                if len(by_id) != batch or any(m.request_id not in by_id
-                                              for m in members):
-                    raise ValueError(
-                        "decode events must carry exactly the wave "
-                        "members' request ids")
-                decode_evs = [by_id[m.request_id] for m in members]
+            # 1b) real decode (serve drivers): the copy dispatched above
+            #     is in flight while the hook's device steps run;
+            #     observed per-request DecodeEvents replace the modeled
+            #     windows
+            decode_evs: Optional[List[DecodeEvent]] = None
+            if self.on_generate is not None and (ret or any(gen_tokens)):
+                evs = self.on_generate(list(members), list(gen_tokens),
+                                       rounds[0])
+                if evs is not None:
+                    if len(evs) != batch:
+                        raise ValueError(
+                            f"decode hook returned {len(evs)} events for "
+                            f"a wave of {batch}")
+                    # match by request id, not position: a hook returning
+                    # events in any order must not cross-wire the windows
+                    by_id = {e.request_id: e for e in evs}
+                    if len(by_id) != batch or any(m.request_id not in by_id
+                                                  for m in members):
+                        raise ValueError(
+                            "decode events must carry exactly the wave "
+                            "members' request ids")
+                    decode_evs = [by_id[m.request_id] for m in members]
 
-        # 2) rewrite -> q_out (SubQ expands to num_queries rewrites)
-        res = None
-        owners: List[int] = []
-        q_out = None
-        if ret:
-            q_out_rows: List[np.ndarray] = []
-            for k, j in enumerate(ret):
-                sigma = members[j].trace.rewrite_sigma
-                nq = members[j].plan[rounds[j]][1]
-                for _ in range(nq):
-                    q_out_rows.append(
-                        synthetic_rewrite(act_q[k][None, :], sigma,
-                                          self._rng)[0]
-                        if sigma > 0 else act_q[k])
-                    owners.append(j)
-            q_out = np.stack(q_out_rows)
+            # 2) rewrite -> q_out (SubQ expands to num_queries rewrites)
+            res = None
+            owners: List[int] = []
+            q_out = None
+            if ret:
+                q_out_rows: List[np.ndarray] = []
+                for k, j in enumerate(ret):
+                    sigma = members[j].trace.rewrite_sigma
+                    nq = members[j].plan[rounds[j]][1]
+                    for _ in range(nq):
+                        q_out_rows.append(
+                            synthetic_rewrite(act_q[k][None, :], sigma,
+                                              self._rng)[0]
+                            if sigma > 0 else act_q[k])
+                        owners.append(j)
+                q_out = np.stack(q_out_rows)
 
-            # 3) hybrid retrieval (device hits + host misses + merge)
-            res = eng.retrieve(q_out, now=now, tenant=wave.tenant)
+                # 3) hybrid retrieval (device hits + host misses + merge)
+                res = eng.retrieve(q_out, now=now, tenant=wave.tenant)
+        except BaseException:
+            # drop every pin the wave's members hold (hit pins taken
+            # before admission, fetch pins taken above, and any earlier
+            # rounds' pins — the requests are dead; their completion
+            # events will never fire) and return the reservation's
+            # unconsumed headroom (lookahead_ex commits on its own
+            # paths; pool.cancel is idempotent so a second commit is
+            # a no-op)
+            for m in keys:
+                eng.buffer.unpin(m)
+            if ticket is not None:
+                eng.admission.commit(ticket)
+            raise
 
         # 4) per-request telemetry + event-clock scheduling
         t_transfer = nbytes / eng.cfg.hw.host_link_bw

@@ -1,10 +1,47 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
-see 1 device; only launch/dryrun.py forces 512 placeholder devices."""
+see 1 device; only launch/dryrun.py forces 512 placeholder devices.
+
+Every test also runs under the happens-before invariant checker: the
+autouse ``_check_flight_recorders`` fixture registers each
+``FlightRecorder`` a test constructs and replays its stream through
+``repro.analysis.check_recorder`` at teardown — a use-before-land race
+or double release anywhere in the suite fails the test that produced
+it.  Tests that synthesize deliberately-corrupt streams opt out with
+``@pytest.mark.trace_unchecked`` (see docs/ANALYSIS.md)."""
 
 import numpy as np
 import pytest
 
 import repro.core as core
+from repro.analysis import check_recorder
+from repro.obs.recorder import FlightRecorder
+
+
+@pytest.fixture(autouse=True)
+def _check_flight_recorders(request, monkeypatch):
+    """Invariant-check every recorder stream the test produced."""
+    if request.node.get_closest_marker("trace_unchecked"):
+        yield
+        return
+    made = []
+    orig_init = FlightRecorder.__init__
+
+    def tracking_init(self, *args, **kwargs):
+        orig_init(self, *args, **kwargs)
+        made.append(self)
+
+    monkeypatch.setattr(FlightRecorder, "__init__", tracking_init)
+    yield
+    bad = []
+    for rec in made:
+        if not rec.events:
+            continue
+        rep = check_recorder(rec)        # skips truncated (dropped) streams
+        bad.extend(v.render() for v in rep.violations)
+    if bad:
+        pytest.fail(
+            "flight-recorder happens-before invariants violated "
+            f"({len(bad)}):\n  " + "\n  ".join(bad), pytrace=False)
 
 
 @pytest.fixture(scope="session")

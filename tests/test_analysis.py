@@ -1,0 +1,514 @@
+"""telint acceptance: the static lint rules against synthetic positive
+and negative snippets, ratchet semantics, the happens-before invariant
+checker against hand-corrupted streams AND a clean served trace, plus
+the lease-leak regressions the lint drove (a raising decode hook or a
+raising ``init_cache`` must not strand pool pages).
+
+The corrupted-stream tests prove the checker FAILS on each injected
+violation class — a checker that passes everything is not a checker.
+"""
+
+import json
+
+import pytest
+
+from repro.analysis import (check_events, check_recorder,
+                            events_from_perfetto, lint_source)
+from repro.analysis import invariants as inv
+from repro.analysis.lint import dump_baseline, load_baseline, ratchet
+from repro.configs import get_arch
+from repro.obs import EventClock, SystemClock, to_perfetto
+from repro.serving import (EngineConfig, RagRequest, TeleRAGEngine,
+                           TeleRAGServer, make_traces)
+from repro.serving.runtime import RetrievalRuntime
+from tests.conftest import unit_queries
+
+SERVING = "src/repro/serving/x.py"        # in TL002/TL004 scope
+LAUNCH = "src/repro/launch/x.py"          # outside the clocked core
+
+
+def _rules(src, path=SERVING, only=None):
+    return sorted({v.rule for v in lint_source(src, path, rules=only)})
+
+
+# ---------------------------------------------------------------------------
+# TL001: lease leak
+# ---------------------------------------------------------------------------
+
+
+def test_tl001_unreleased_acquire_fires():
+    src = ("def f(pool):\n"
+           "    lease = pool.lease_slots(4, owner='x')\n"
+           "    return 1\n")
+    vs = lint_source(src, SERVING, rules=("TL001",))
+    assert [v.rule for v in vs] == ["TL001"]
+    assert "never released" in vs[0].message
+    assert vs[0].symbol == "f"
+
+
+def test_tl001_release_without_protection_still_fires():
+    src = ("def f(pool):\n"
+           "    lease = pool.lease_slots(4)\n"
+           "    work()\n"
+           "    pool.release(lease)\n")
+    vs = lint_source(src, SERVING, rules=("TL001",))
+    assert len(vs) == 1 and "not on exception paths" in vs[0].message
+
+
+def test_tl001_try_finally_release_is_clean():
+    src = ("def f(pool):\n"
+           "    lease = pool.lease_slots(4)\n"
+           "    try:\n"
+           "        work()\n"
+           "    finally:\n"
+           "        pool.release(lease)\n")
+    assert _rules(src, only=("TL001",)) == []
+
+
+def test_tl001_except_cleanup_is_clean():
+    src = ("def f(pool):\n"
+           "    lease = pool.lease_slots(4)\n"
+           "    try:\n"
+           "        work()\n"
+           "    except BaseException:\n"
+           "        pool.release(lease)\n"
+           "        raise\n")
+    assert _rules(src, only=("TL001",)) == []
+
+
+def test_tl001_escapes_are_clean():
+    returned = ("def f(pool):\n"
+                "    lease = pool.lease_slots(4)\n"
+                "    return lease\n")
+    stored = ("def f(self, pool):\n"
+              "    lease = pool.lease_slots(4)\n"
+              "    self.leases[3] = lease\n")
+    appended = ("def f(pool, out):\n"
+                "    lease = pool.lease_slots(4)\n"
+                "    out.append(lease)\n")
+    for src in (returned, stored, appended):
+        assert _rules(src, only=("TL001",)) == []
+
+
+def test_tl001_discarded_acquire_fires():
+    src = ("def f(buffer, m, cs):\n"
+           "    buffer.pin_clusters(m, cs)\n")
+    vs = lint_source(src, SERVING, rules=("TL001",))
+    assert len(vs) == 1 and "discarded" in vs[0].message
+    assert vs[0].detail == "discard:pin_clusters"
+
+
+def test_tl001_keyed_registry_release_excuses_discard():
+    # the runtime idiom: pins registered under key ``m`` are dropped by
+    # a protected ``unpin(m)`` — the lease object itself is never named
+    src = ("def f(buffer, m, cs):\n"
+           "    try:\n"
+           "        buffer.pin_clusters(m, cs)\n"
+           "        work()\n"
+           "    except BaseException:\n"
+           "        buffer.unpin(m)\n"
+           "        raise\n")
+    assert _rules(src, only=("TL001",)) == []
+
+
+def test_tl001_loop_alias_credits_the_iterated_list():
+    # releasing ``pins`` inside ``for m, pins in zip(keys, hit_pins)``
+    # must credit ``hit_pins``; the except-side ``unpin(m)`` protects
+    # the listcomp acquire through its key argument
+    src = ("def f(eng, keys, sets):\n"
+           "    hit_pins = [eng.buffer.pin_clusters(m, cs)\n"
+           "                for m, cs in zip(keys, sets)]\n"
+           "    try:\n"
+           "        work()\n"
+           "    except BaseException:\n"
+           "        for m in keys:\n"
+           "            eng.buffer.unpin(m)\n"
+           "        raise\n"
+           "    for m, pins in zip(keys, hit_pins):\n"
+           "        eng.buffer.release_pins(m, pins)\n")
+    assert _rules(src, only=("TL001",)) == []
+
+
+# ---------------------------------------------------------------------------
+# TL002: wall-clock discipline
+# ---------------------------------------------------------------------------
+
+
+def test_tl002_wall_clock_in_core_fires_but_launch_is_exempt():
+    src = ("import time\n"
+           "def f():\n"
+           "    return time.perf_counter()\n")
+    assert _rules(src, path=SERVING, only=("TL002",)) == ["TL002"]
+    assert _rules(src, path=LAUNCH, only=("TL002",)) == []
+    # the injectable clock module is the one sanctioned site
+    assert _rules(src, path="src/repro/obs/clock.py",
+                  only=("TL002",)) == []
+
+
+def test_tl002_from_import_form_fires():
+    src = ("from time import perf_counter\n"
+           "def f():\n"
+           "    return perf_counter()\n")
+    vs = lint_source(src, SERVING, rules=("TL002",))
+    assert len(vs) == 1 and vs[0].detail == "perf_counter"
+
+
+def test_tl002_non_clock_time_attrs_are_clean():
+    src = ("import time\n"
+           "def f():\n"
+           "    time.sleep(0.1)\n")
+    assert _rules(src, only=("TL002",)) == []
+
+
+# ---------------------------------------------------------------------------
+# TL003: kernel-mode discipline
+# ---------------------------------------------------------------------------
+
+
+def test_tl003_interpret_kwarg_outside_kernels_fires():
+    src = "y = pallas_call(f, interpret=True)\n"
+    assert _rules(src, path=SERVING, only=("TL003",)) == ["TL003"]
+    assert _rules(src, path="src/repro/kernels/x.py",
+                  only=("TL003",)) == []
+
+
+def test_tl003_interpret_mode_literal_fires():
+    src = "res = search(q, kernel_mode='interpret')\n"
+    vs = lint_source(src, SERVING, rules=("TL003",))
+    assert len(vs) == 1 and "interpret" in vs[0].detail
+    # non-interpret literals are fine
+    assert _rules("res = search(q, kernel_mode='ref')\n",
+                  only=("TL003",)) == []
+
+
+# ---------------------------------------------------------------------------
+# TL004: tenant threading
+# ---------------------------------------------------------------------------
+
+
+def test_tl004_untenanted_admit_fires_in_scope_only():
+    src = "t = eng.admission.admit(8, owner='w1')\n"
+    assert "TL004" in _rules(src, path=SERVING, only=("TL004",))
+    assert _rules(src, path=LAUNCH, only=("TL004",)) == []
+    assert _rules("t = eng.admission.admit(8, tenant='a')\n",
+                  only=("TL004",)) == []
+    # **kwargs may carry the tenant: not provable, not flagged
+    assert _rules("t = eng.admission.admit(8, **kw)\n",
+                  only=("TL004",)) == []
+
+
+# ---------------------------------------------------------------------------
+# TL005: swallowed pressure
+# ---------------------------------------------------------------------------
+
+
+def test_tl005_bare_and_swallowing_excepts_fire():
+    bare = ("try:\n    f()\nexcept:\n    pass\n")
+    swallow = ("try:\n    f()\nexcept PoolExhausted:\n    pass\n")
+    handled = ("try:\n    f()\nexcept PoolExhausted:\n    park()\n")
+    named = ("try:\n    f()\nexcept ValueError:\n    pass\n")
+    assert _rules(bare, only=("TL005",)) == ["TL005"]
+    assert _rules(swallow, only=("TL005",)) == ["TL005"]
+    assert _rules(handled, only=("TL005",)) == []
+    assert _rules(named, only=("TL005",)) == []
+
+
+# ---------------------------------------------------------------------------
+# Ratchet baseline
+# ---------------------------------------------------------------------------
+
+
+def test_ratchet_grandfathers_baseline_and_catches_new(tmp_path):
+    leaky = ("def f(pool):\n"
+             "    lease = pool.lease_slots(4)\n"
+             "    return 1\n")
+    vs = lint_source(leaky, SERVING, rules=("TL001",))
+    path = str(tmp_path / "baseline.json")
+    dump_baseline(vs, path)
+    base = load_baseline(path)
+    assert base == {vs[0].key: 1}
+
+    # same findings: nothing new
+    new, stale = ratchet(vs, base)
+    assert new == [] and stale == []
+
+    # a second leak in another function is NEW even with a baseline
+    vs2 = lint_source(leaky + "def g(pool):\n"
+                              "    l2 = pool.lease_slots(2)\n"
+                              "    return 1\n", SERVING,
+                      rules=("TL001",))
+    new, _ = ratchet(vs2, base)
+    assert len(new) == 1 and new[0].symbol == "g"
+
+    # fixing the grandfathered one reports its key as stale, still passes
+    new, stale = ratchet([], base)
+    assert new == [] and stale == [vs[0].key]
+
+
+def test_baseline_schema_is_versioned(tmp_path):
+    path = str(tmp_path / "b.json")
+    with open(path, "w") as f:
+        json.dump({"schema": "something-else", "violations": {}}, f)
+    with pytest.raises(AssertionError):
+        load_baseline(path)
+
+
+# ---------------------------------------------------------------------------
+# Happens-before invariant checker: hand-corrupted streams
+# ---------------------------------------------------------------------------
+
+
+def _clean_stream():
+    """A minimal well-ordered wave: admit -> reserve -> issue ->
+    dispatch -> land -> retrieve -> release -> complete."""
+    return [
+        {"kind": "request", "label": "admit", "t": 0.0, "replica": -1,
+         "request_id": 0, "tenant": "shared"},
+        {"kind": "admission.admit", "t": 0.10, "replica": 0, "wave_id": 1,
+         "owner": "w1", "pages_requested": 4, "pages_granted": 4},
+        {"kind": "transfer.issue", "t": 0.10, "replica": 0,
+         "transfer_id": 7, "nbytes": 100, "start_t": 0.10, "end_t": 0.30},
+        {"kind": "wave.dispatch", "t": 0.10, "replica": 0, "wave_id": 1,
+         "size": 1, "request_ids": (0,), "transfer_id": 7, "nbytes": 100},
+        {"kind": "pool.lease", "t": 0.10, "replica": 0, "owner": "prefetch",
+         "pages": 4, "nbytes": 100},
+        {"kind": "span", "name": "retrieve", "t": 0.35, "dur": 0.01,
+         "replica": 0, "request_id": 0, "wave_id": 1},
+        {"kind": "pool.release", "t": 0.50, "replica": 0,
+         "owner": "prefetch", "pages": 4, "nbytes": 100},
+        {"kind": "request", "label": "complete", "t": 0.60, "replica": -1,
+         "request_id": 0, "tenant": "shared"},
+    ]
+
+
+def test_clean_stream_passes_fully_drained():
+    rep = check_events(_clean_stream(), drained=True,
+                       must_drain=("prefetch", "kv"))
+    assert rep.ok, rep.summary()
+    assert rep.stats["transfers"] == 1
+    assert rep.stats["waves_dispatched"] == 1
+    assert rep.outstanding == {}
+
+
+def test_use_before_land_race_is_caught():
+    evs = _clean_stream()
+    retrieve = next(e for e in evs if e.get("name") == "retrieve")
+    retrieve["t"] = 0.20                   # transfer lands at 0.30
+    rep = check_events(evs)
+    assert rep.of(inv.USE_BEFORE_LAND), rep.summary()
+    assert rep.of(inv.USE_BEFORE_LAND)[0].wave_id == 1
+
+
+def test_dispatch_without_admission_is_caught():
+    evs = [e for e in _clean_stream()
+           if e["kind"] != "admission.admit"]
+    rep = check_events(evs)
+    assert rep.of(inv.DISPATCH_WITHOUT_ADMISSION), rep.summary()
+
+    # admission AFTER the dispatch is just as wrong
+    evs = _clean_stream()
+    next(e for e in evs if e["kind"] == "admission.admit")["t"] = 0.2
+    rep = check_events(evs)
+    assert rep.of(inv.DISPATCH_WITHOUT_ADMISSION), rep.summary()
+
+
+def test_double_release_and_ledger_drift_are_caught():
+    evs = _clean_stream()
+    evs.append({"kind": "pool.release", "t": 0.55, "replica": 0,
+                "owner": "prefetch", "pages": 4, "nbytes": 100})
+    rep = check_events(evs)
+    assert rep.of(inv.DOUBLE_RELEASE), rep.summary()
+
+    # byte drift without a page dip: releasing fatter bytes than leased
+    evs = _clean_stream()
+    next(e for e in evs if e["kind"] == "pool.release")["nbytes"] = 160
+    rep = check_events(evs)
+    assert rep.of(inv.LEDGER_DRIFT) and not rep.of(inv.DOUBLE_RELEASE)
+
+
+def test_held_at_drain_is_caught_only_for_named_owners():
+    evs = [e for e in _clean_stream() if e["kind"] != "pool.release"]
+    rep = check_events(evs, drained=True, must_drain=("prefetch",))
+    assert rep.of(inv.HELD_AT_DRAIN), rep.summary()
+    # warm residency is legal when the owner is not required to drain
+    rep = check_events(evs, drained=True, must_drain=("kv",))
+    assert rep.ok, rep.summary()
+    assert rep.outstanding == {"r0:prefetch": 4}
+
+
+def test_stall_without_resume_is_caught():
+    evs = _clean_stream()
+    evs.append({"kind": "request", "label": "pressure_stall", "t": 0.7,
+                "replica": 0, "request_id": 0, "tenant": "shared"})
+    rep = check_events(evs, drained=True)
+    assert rep.of(inv.STALL_WITHOUT_RESUME), rep.summary()
+    # not drained yet: a parked request is a normal transient
+    assert check_events(evs).ok
+
+
+def test_transfer_inverted_and_lifecycle_disorder_are_caught():
+    evs = _clean_stream()
+    issue = next(e for e in evs if e["kind"] == "transfer.issue")
+    issue["end_t"] = 0.05                  # lands before it starts
+    rep = check_events(evs)
+    assert rep.of(inv.TRANSFER_INVERTED), rep.summary()
+
+    evs = _clean_stream()
+    next(e for e in evs
+         if e["kind"] == "request" and e["label"] == "complete")["t"] = -1.0
+    rep = check_events(evs)
+    assert rep.of(inv.LIFECYCLE_DISORDER), rep.summary()
+
+
+def test_kv_conservation_and_decode_ordering():
+    good = [
+        {"kind": "kv.acquire", "t": 0.0, "replica": 0},
+        {"kind": "decode", "t": 0.1, "replica": 0, "request_id": 3},
+        {"kind": "kv.release", "t": 0.2, "replica": 0},
+    ]
+    assert check_events(good, drained=True, must_drain=("kv",)).ok
+
+    rep = check_events(good + [{"kind": "kv.release", "t": 0.3,
+                                "replica": 0}])
+    assert rep.of(inv.KV_DOUBLE_RELEASE)
+
+    rep = check_events([good[1], good[0], good[2]])
+    assert rep.of(inv.DECODE_WITHOUT_KV)
+
+    rep = check_events(good[:2], drained=True, must_drain=("kv",))
+    assert rep.of(inv.HELD_AT_DRAIN)
+
+
+# ---------------------------------------------------------------------------
+# Invariants on REAL traces: a served run is clean, and the Perfetto
+# export round-trips enough structure for the race/ordering checks
+# ---------------------------------------------------------------------------
+
+
+def _serve(small_index, small_store, rng, n=6):
+    srv = TeleRAGServer(small_index, EngineConfig(
+        nprobe=16, top_k=3, buffer_pages=200, lookahead_rank=32,
+        kernel_mode="ref", chips=8, cache_enabled=True, seed=5), 2,
+        get_arch("llama3-8b"), micro_batch=2)
+    q = unit_queries(small_store, rng, n)
+    traces = make_traces("hyde", n, seed=11)
+    resp = srv.serve([RagRequest(q=q[i], trace=traces[i])
+                      for i in range(n)])
+    assert all(r.state.value == "complete" for r in resp)
+    return srv
+
+
+def test_served_trace_passes_invariants_drained(small_index, small_store,
+                                                rng):
+    srv = _serve(small_index, small_store, rng)
+    rep = check_recorder(srv.recorder, drained=True, must_drain=("kv",))
+    assert rep.ok, rep.summary()
+    assert rep.stats["waves_dispatched"] > 0
+    assert rep.stats["pool_edges"] > 0
+
+
+def test_perfetto_reconstruction_passes_and_catches_races(
+        small_index, small_store, rng):
+    srv = _serve(small_index, small_store, rng)
+    evs = events_from_perfetto(to_perfetto(srv.recorder))
+    rep = check_events(evs)
+    assert rep.ok, rep.summary()
+    assert rep.stats["transfers"] > 0
+    assert rep.stats["waves_dispatched"] > 0
+
+    # corrupt the reconstruction: drag one wave's retrieve span before
+    # its transfer lands — the checker must notice on Perfetto data too
+    dispatch = next(e for e in evs if e["kind"] == "wave.dispatch"
+                    and e["transfer_id"] >= 0)
+    land = next(e for e in evs if e["kind"] == "transfer.land"
+                and e["transfer_id"] == dispatch["transfer_id"]
+                and e["replica"] == dispatch["replica"])
+    moved = False
+    for e in evs:
+        if (e["kind"] == "span" and e.get("name") == "retrieve"
+                and e["wave_id"] == dispatch["wave_id"]
+                and e["replica"] == dispatch["replica"]):
+            e["t"] = land["end_t"] - 1.0
+            moved = True
+    assert moved
+    assert check_events(evs).of(inv.USE_BEFORE_LAND)
+
+
+# ---------------------------------------------------------------------------
+# Regressions: the TL001 fixes this PR made must hold under fault
+# ---------------------------------------------------------------------------
+
+
+def _cfg(**kw):
+    defaults = dict(nprobe=16, top_k=3, buffer_pages=200, lookahead_rank=32,
+                    kernel_mode="ref", chips=8, cache_enabled=False, seed=5)
+    defaults.update(kw)
+    return EngineConfig(**defaults)
+
+
+@pytest.mark.trace_unchecked        # the fault aborts mid-wave: pins are
+def test_raising_decode_hook_leaves_no_stranded_pages(  # released, but the
+        small_index, small_store, rng):  # request never completes
+    def hook(records, gen_tokens, rnd):
+        raise RuntimeError("decode died")
+
+    eng = TeleRAGEngine(small_index, _cfg(), get_arch("llama3-8b"))
+    runtime = RetrievalRuntime(eng, on_generate=hook)
+    q = unit_queries(small_store, rng, 2)
+    for i, tr in enumerate(make_traces("hyde", 2, seed=3)):
+        runtime.submit(q[i], tr)
+    free_before = eng.pool.free_pages()
+    with pytest.raises(RuntimeError):
+        runtime.run()
+    # the admission reservation was returned and every member pin
+    # dropped — residency remains (warm cache), but nothing is pinned
+    # or reserved, so end_batch can evict back to a full free list
+    assert eng.pool.reserved_pages() == 0
+    assert eng.buffer.pages_pinned_by_others(object()) == 0
+    eng.end_batch()
+    assert eng.pool.free_pages() == eng.pool.num_pages
+    assert eng.pool.free_pages() >= free_before
+
+
+def test_kv_acquire_releases_pages_when_init_cache_raises(
+        small_index, monkeypatch):
+    from repro.memory.pool import DevicePagePool
+    from repro.serving import KVCacheManager
+    from repro.serving import kv_cache as kv_mod
+
+    cfg = get_arch("llama3-8b").reduced()
+    pool = DevicePagePool(small_index.paged, num_pages=256)
+    kv = KVCacheManager(cfg, pool=pool)
+    free_before = pool.free_pages()
+
+    def boom(*a, **kw):
+        raise RuntimeError("OOM during init_cache")
+
+    monkeypatch.setattr(kv_mod.tf, "init_cache", boom)
+    with pytest.raises(RuntimeError):
+        kv.acquire(2, 64, fresh=True)
+    assert pool.free_pages() == free_before
+    assert pool.reserved_pages() == 0
+
+
+# ---------------------------------------------------------------------------
+# Injectable clock
+# ---------------------------------------------------------------------------
+
+
+def test_event_clock_is_deterministic_and_system_clock_is_real():
+    ec = EventClock()
+    assert not ec.real
+    assert ec.perf() == ec.perf() == 0.0
+    sc = SystemClock()
+    assert sc.real
+    assert sc.perf() <= sc.perf()
+
+
+def test_engine_default_clock_keeps_calibration_deterministic(
+        small_index, small_store, rng):
+    eng = TeleRAGEngine(small_index, _cfg(), get_arch("llama3-8b"))
+    assert isinstance(eng.wall, EventClock)
+    # under the event clock, elapsed wall time is 0 — calibration must
+    # fall back to the modeled constant, identically on every machine
+    assert eng.calibrate_tcc() == pytest.approx(eng.effective_tcc())

@@ -14,14 +14,31 @@ Checks, beyond JSON well-formedness:
 * counter events (``"C"``) exist and include the ledger-occupancy and
   pool-free-pages tracks the acceptance criteria require.
 
+After format validation the trace is replayed through the
+happens-before invariant checker (``repro.analysis.invariants``):
+use-before-land races, double releases, ledger drift and
+stall-without-resume all fail the check.  The lossless sibling
+``<trace>.jsonl`` stream is preferred (full checks, including pool
+conservation); when only the Perfetto JSON exists the events are
+reconstructed from it (race/ordering checks only).  Pass an explicit
+JSONL path as a second argument to override the sibling lookup.
+
 Usage:  python tools/check_trace.py experiments/bench/openloop_trace.json
+        python tools/check_trace.py trace.json stream.jsonl
 """
 
 from __future__ import annotations
 
 import json
+import os
 import sys
 from typing import Dict, Tuple
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), os.pardir, "src"))
+
+from repro.analysis import (check_events, events_from_jsonl,     # noqa: E402
+                            events_from_perfetto)
 
 # phases that must carry a timestamp
 _TIMED = {"X", "B", "E", "b", "e", "i", "C"}
@@ -72,8 +89,31 @@ def validate_trace(doc: Dict) -> Dict[str, int]:
     return phases
 
 
+def check_invariants(doc: Dict, path: str,
+                     jsonl: str = None) -> int:
+    """Replay the trace's happens-before invariants; returns the
+    violation count (0 = clean).  Prefers the lossless JSONL stream."""
+    if int(doc.get("otherData", {}).get("dropped_events", 0) or 0):
+        print("invariants: skipped (recorder dropped events — the "
+              "surviving window cannot balance)")
+        return 0
+    if jsonl is None:
+        sibling = os.path.splitext(path)[0] + ".jsonl"
+        jsonl = sibling if os.path.exists(sibling) else None
+    if jsonl is not None:
+        events, src = events_from_jsonl(jsonl), jsonl
+    else:
+        events = events_from_perfetto(doc)
+        src = f"{path} (reconstructed — race/ordering checks only)"
+    rep = check_events(events)
+    for v in rep.violations:
+        print(v.render())
+    print(f"invariants {src}: {rep.summary()}")
+    return len(rep.violations)
+
+
 def main(argv) -> int:
-    if len(argv) != 2:
+    if len(argv) not in (2, 3):
         print(__doc__)
         return 2
     with open(argv[1]) as f:
@@ -82,7 +122,8 @@ def main(argv) -> int:
     total = sum(phases.values())
     print(f"OK {argv[1]}: {total} events "
           + " ".join(f"{ph}={n}" for ph, n in sorted(phases.items())))
-    return 0
+    return 1 if check_invariants(doc, argv[1],
+                                 argv[2] if len(argv) == 3 else None) else 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,151 @@
+#!/usr/bin/env python
+"""telint: the repo's lease/clock/kernel-discipline lint + trace
+invariant checker (rule catalog: docs/ANALYSIS.md).
+
+Static lint (rules TL001–TL005 over src/repro), ratcheted:
+
+  python tools/telint.py                          # list all findings
+  python tools/telint.py --ratchet analysis/baseline.json
+                                                  # fail only on NEW ones
+  python tools/telint.py --update-baseline analysis/baseline.json
+                                                  # re-grandfather
+
+Dynamic happens-before check on a recorded trace (JSONL stream from
+``repro.obs.export.write_jsonl`` = full checks; Perfetto JSON = the
+span/transfer/admission subset):
+
+  python tools/telint.py --trace experiments/bench/openloop_trace.jsonl
+
+``--report out.json`` writes a machine-readable report (CI artifact).
+Exit status: 0 clean, 1 findings, 2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# run from a checkout without PYTHONPATH (CI calls `python tools/telint.py`)
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+if os.path.isdir(_SRC) and _SRC not in sys.path:
+    sys.path.insert(0, os.path.abspath(_SRC))
+
+from repro.analysis import lint as lint_mod                  # noqa: E402
+
+
+def _repo_root() -> str:
+    return os.path.abspath(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+
+def run_static(args) -> tuple:
+    """(exit code, report dict) for the static half."""
+    root = _repo_root()
+    violations = lint_mod.lint_tree(args.root, repo_root=root,
+                                    rules=args.rules)
+    report = {
+        "mode": "static",
+        "root": args.root,
+        "total": len(violations),
+        "violations": [vars(v) for v in violations],
+    }
+    if args.update_baseline:
+        lint_mod.dump_baseline(violations,
+                               os.path.join(root, args.update_baseline))
+        print(f"baseline updated: {args.update_baseline} "
+              f"({len(violations)} grandfathered finding(s))")
+        return 0, report
+    if args.ratchet:
+        baseline = lint_mod.load_baseline(os.path.join(root, args.ratchet))
+        new, stale = lint_mod.ratchet(violations, baseline)
+        report["baseline"] = args.ratchet
+        report["new"] = [vars(v) for v in new]
+        report["stale"] = stale
+        for v in new:
+            print(v.render())
+        if stale:
+            print(f"note: {len(stale)} baseline entr"
+                  f"{'y is' if len(stale) == 1 else 'ies are'} stale "
+                  f"(fixed since grandfathering) — run "
+                  f"--update-baseline to tighten the ratchet:")
+            for k in stale:
+                print(f"  {k}")
+        print(f"telint: {len(violations)} finding(s), "
+              f"{len(new)} new vs baseline ({len(baseline)} grandfathered)")
+        return (1 if new else 0), report
+    for v in violations:
+        print(v.render())
+    print(f"telint: {len(violations)} finding(s)")
+    return (1 if violations else 0), report
+
+
+def run_trace(args) -> tuple:
+    """(exit code, report dict) for the dynamic half."""
+    from repro.analysis import invariants as inv
+    path = args.trace
+    if path.endswith(".jsonl"):
+        events = inv.events_from_jsonl(path)
+        source = "jsonl"
+    else:
+        with open(path) as f:
+            doc = json.load(f)
+        events = inv.events_from_perfetto(doc)
+        source = "perfetto"
+        print("note: Perfetto input — race/ordering checks only "
+              "(pool conservation needs the .jsonl stream)")
+    rep = inv.check_events(events, drained=args.drained,
+                           must_drain=tuple(args.must_drain or ()))
+    print(f"{path} ({source}): {rep.summary()}")
+    report = {
+        "mode": "trace", "trace": path, "source": source,
+        "checked_events": rep.checked_events,
+        "stats": rep.stats,
+        "outstanding": rep.outstanding,
+        "violations": [vars(v) for v in rep.violations],
+    }
+    return (0 if rep.ok else 1), report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="telint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--root", default="src/repro",
+                    help="tree to lint (repo-relative; default src/repro)")
+    ap.add_argument("--rules", nargs="*", default=None, metavar="TLnnn",
+                    help="restrict to specific rule ids")
+    ap.add_argument("--ratchet", default=None, metavar="BASELINE",
+                    help="fail only on findings NOT in this baseline")
+    ap.add_argument("--update-baseline", default=None, metavar="BASELINE",
+                    help="write the current findings as the new baseline")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="check happens-before invariants on a recorded "
+                         "trace (.jsonl = full checks, .json Perfetto = "
+                         "ordering subset) instead of linting")
+    ap.add_argument("--drained", action="store_true",
+                    help="with --trace: the stream covers a full drain — "
+                         "also enforce end-of-run conditions")
+    ap.add_argument("--must-drain", nargs="*", default=None, metavar="OWNER",
+                    help="with --trace --drained: owner categories whose "
+                         "pool balance must end at zero (e.g. prefetch kv)")
+    ap.add_argument("--report", default=None, metavar="OUT.json",
+                    help="write a machine-readable findings report")
+    args = ap.parse_args(argv)
+
+    if args.trace:
+        code, report = run_trace(args)
+    else:
+        code, report = run_static(args)
+    if args.report:
+        os.makedirs(os.path.dirname(os.path.abspath(args.report)),
+                    exist_ok=True)
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"report written: {args.report}")
+    return code
+
+
+if __name__ == "__main__":
+    sys.exit(main())
