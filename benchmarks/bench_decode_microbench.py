@@ -15,6 +15,13 @@ Kernels timed per step:
   * ``probe_topk_unfused``  — legacy retrieval chain: centroid probe ->
                               host-built page mask -> ``ivf_topk``
   * ``probe_topk_fused``    — the one-launch ``probe_and_topk`` kernel
+  * ``serve_path_paged`` / ``serve_path_dense`` — the ACTUAL engine
+    decode step: a ``serving.DecodeRunner`` wave (lease + full
+    transformer step + sample) on the paged block-table substrate vs
+    the dense bucket path, per decode step.  The paged row is verified
+    to execute the paged kernels (``flash_decode_paged`` traced,
+    ``append_paged`` accounted) — the row cannot silently fall back to
+    dense.
 
 Wall times are honest for the mode they ran in (ref on CPU is the
 default; interpret mode is a correctness tool, not a perf proxy — the
@@ -41,8 +48,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from types import SimpleNamespace
+
 from repro.configs.base import ArchConfig
 from repro.kernels import ops
+from repro.models import transformer as tf
+from repro.obs import SystemClock
+from repro.serving import DecodeRunner, EngineConfig
 from repro.serving.kv_cache import KVCacheManager
 from benchmarks.common import BENCH_DIR, emit, summarize_rows, write_report
 
@@ -97,6 +109,73 @@ def validate_report(report: Dict) -> None:
         assert (fused["probe_topk_fused"]["modeled_bytes"]
                 <= fused["probe_topk_unfused"]["modeled_bytes"]), \
             "fused retrieval must not model more HBM traffic than unfused"
+
+
+def _serve_path_records(*, B: int, steps: int, page_size: int,
+                        mode: str) -> List[Dict]:
+    """Time the ACTUAL engine decode step — a ``DecodeRunner`` wave
+    (KV lease + full transformer serve step + sample per token) — in
+    both modes, and assert the paged row really executed the paged
+    substrate: ``flash_decode_paged`` must be traced by the paged
+    runner's jit (and never by the dense one), and every paged step
+    must have gone through ``append_paged`` accounting."""
+    L, KVH, G, Dh = 2, 2, 2, 16
+    cfg = ArchConfig(name="microbench-serve", family="dense",
+                     source="bench", d_model=KVH * G * Dh, num_layers=L,
+                     num_heads=KVH * G, num_kv_heads=KVH, head_dim=Dh,
+                     d_ff=64, vocab_size=64)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    members = [SimpleNamespace(request_id=i, tenant="shared")
+               for i in range(B)]
+    max_len = max(steps, page_size) + 1
+    waves = 4
+
+    traced = {"paged": 0}
+    orig_paged = ops.flash_decode_paged
+
+    def counting_paged(*a, **kw):
+        traced["paged"] += 1
+        return orig_paged(*a, **kw)
+
+    records = []
+    ops.flash_decode_paged = counting_paged
+    try:
+        for name, paged in (("serve_path_paged", True),
+                            ("serve_path_dense", False)):
+            runner = DecodeRunner(params, cfg, max_len=max_len,
+                                  max_steps=steps, page_size=page_size,
+                                  slab_seqs=B, paged=paged)
+            runner.attach(SimpleNamespace(
+                wall=SystemClock(),
+                engines=[SimpleNamespace(
+                    cfg=EngineConfig(paged_decode=paged, kernel_mode=mode),
+                    pool=None)]))
+            before = traced["paged"]
+            secs: List[float] = []
+            for w in range(waves + 1):          # wave 0 is jit warmup
+                t0 = time.perf_counter()
+                runner(0, members, [steps] * B, w)
+                dt = time.perf_counter() - t0
+                if w:
+                    secs.append(dt / max(steps, 1))
+            if paged:
+                assert traced["paged"] > before, \
+                    "paged serve path never traced flash_decode_paged"
+                assert runner.stats["paged_appends"] == (waves + 1) * steps
+                assert runner.stats["dense_waves"] == 0
+            else:
+                assert traced["paged"] == before, \
+                    "dense serve path traced the paged kernel"
+                assert runner.stats["paged_waves"] == 0
+                assert runner.stats["dense_steps"] == (waves + 1) * steps
+            # per-step modeled traffic: k+v append write + full-capacity
+            # KV read for attention, all layers (bf16 slab width)
+            modeled = (2 * L * B * KVH * Dh * 2
+                       + 2 * L * B * max_len * KVH * Dh * 2)
+            records.append(_record(name, secs, modeled))
+    finally:
+        ops.flash_decode_paged = orig_paged
+    return records
 
 
 def run(*, B: int = 8, S: int = 1024, KVH: int = 8, G: int = 4,
@@ -187,6 +266,14 @@ def run(*, B: int = 8, S: int = 1024, KVH: int = 8, G: int = 4,
         emit(f"decode_microbench/{name}", rec["wall_us_mean"],
              f"p99={rec['wall_us_p99']};modeled_MB="
              f"{modeled / 1e6:.2f};mode={resolved}")
+
+    # the end-to-end engine decode step (DecodeRunner wave), both modes
+    for rec in _serve_path_records(B=B, steps=steps, page_size=page_size,
+                                   mode=mode):
+        records.append(rec)
+        emit(f"decode_microbench/{rec['name']}", rec["wall_us_mean"],
+             f"p99={rec['wall_us_p99']};modeled_MB="
+             f"{rec['modeled_bytes'] / 1e6:.2f};mode={resolved}")
 
     report = {
         "schema": SCHEMA,

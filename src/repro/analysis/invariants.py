@@ -20,6 +20,13 @@ orders TeleRAG's overlap correctness rides on:
   * **kv acquire → decode → release**: decode steps only appear after
     a KV acquire on that replica (when the replica uses managed KV at
     all), and KV acquire/release edges balance.
+  * **paged lease discipline**: events carrying a ``lease_id`` (the
+    block-table decode path) obey per-(replica, lease) ordering —
+    ``kv.append`` only between that lease's ``kv.acquire`` and
+    ``kv.release``, never past the lease's ``max_len`` capacity — and
+    page conservation: the slab page count returned at ``kv.release``
+    equals the count taken at ``kv.acquire``, and a lease id is never
+    opened twice (ids are process-global and unique by construction).
   * **stall → resume**: in drained mode no request may end its life
     parked (``pressure_stall`` as its last lifecycle mark), and every
     ``admission.stall`` needs a matching resume.
@@ -46,6 +53,10 @@ DISPATCH_WITHOUT_ADMISSION = "dispatch_without_admission"
 DOUBLE_RELEASE = "double_release"
 LEDGER_DRIFT = "ledger_drift"
 KV_DOUBLE_RELEASE = "kv_double_release"
+KV_LEASE_REUSE = "kv_lease_reuse"
+KV_APPEND_OUT_OF_LEASE = "kv_append_out_of_lease"
+KV_APPEND_OVERFLOW = "kv_append_overflow"
+KV_PAGE_CONSERVATION = "kv_page_conservation"
 DECODE_WITHOUT_KV = "decode_without_kv"
 TRANSFER_INVERTED = "transfer_inverted"
 LIFECYCLE_DISORDER = "lifecycle_disorder"
@@ -296,6 +307,10 @@ def check_events(events: Iterable, *, drained: bool = False,
     kv_replicas = {int(g(e, "replica", -1)) for e in evs
                    if str(g(e, "kind", "")).startswith("kv.")}
     kv_seen: Dict[int, bool] = {}
+    # paged-lease discipline, keyed (replica, lease_id) for lease_id>=0:
+    # open leases carry their acquired page count + max_len capacity
+    paged_open: Dict[Tuple[int, int], Dict[str, int]] = {}
+    paged_done: set = set()
     for e in evs:
         kind = str(g(e, "kind", ""))
         if kind in ("pool.lease", "pool.release"):
@@ -323,6 +338,34 @@ def check_events(events: Iterable, *, drained: bool = False,
             r = int(g(e, "replica", -1))
             kv_out[r] = kv_out.get(r, 0) + 1
             kv_seen[r] = True
+            lid = int(g(e, "lease_id", -1))
+            if lid >= 0:
+                key = (r, lid)
+                if key in paged_open or key in paged_done:
+                    v(InvariantViolation(
+                        KV_LEASE_REUSE, t=float(g(e, "t", 0.0)), replica=r,
+                        message=f"lease {lid} acquired twice — paged lease "
+                                f"ids are unique by construction"))
+                else:
+                    paged_open[key] = {"pages": int(g(e, "pages", 0)),
+                                       "max_len": int(g(e, "max_len", 0))}
+        elif kind == "kv.append":
+            r = int(g(e, "replica", -1))
+            lid = int(g(e, "lease_id", -1))
+            t = float(g(e, "t", 0.0))
+            st = paged_open.get((r, lid)) if lid >= 0 else None
+            if st is None:
+                v(InvariantViolation(
+                    KV_APPEND_OUT_OF_LEASE, t=t, replica=r,
+                    message=f"kv.append for lease {lid} outside its "
+                            f"acquire→release window (not an open paged "
+                            f"lease on this replica)"))
+            elif st["max_len"] > 0 and int(g(e, "length", 0)) > st["max_len"]:
+                v(InvariantViolation(
+                    KV_APPEND_OVERFLOW, t=t, replica=r,
+                    message=f"kv.append advanced lease {lid} to length "
+                            f"{g(e, 'length')} past its max_len "
+                            f"{st['max_len']} capacity"))
         elif kind == "kv.release":
             r = int(g(e, "replica", -1))
             kv_out[r] = kv_out.get(r, 0) - 1
@@ -331,6 +374,26 @@ def check_events(events: Iterable, *, drained: bool = False,
                     KV_DOUBLE_RELEASE, t=float(g(e, "t", 0.0)), replica=r,
                     message="kv.release without a matching kv.acquire"))
                 kv_out[r] = 0
+            lid = int(g(e, "lease_id", -1))
+            if lid >= 0:
+                key = (r, lid)
+                st = paged_open.pop(key, None)
+                t = float(g(e, "t", 0.0))
+                if st is None:
+                    v(InvariantViolation(
+                        KV_DOUBLE_RELEASE, t=t, replica=r,
+                        message=f"kv.release for lease {lid} that is not "
+                                f"open (double release or never acquired)"))
+                else:
+                    paged_done.add(key)
+                    rel = int(g(e, "pages", 0))
+                    if rel != st["pages"]:
+                        v(InvariantViolation(
+                            KV_PAGE_CONSERVATION, t=t, replica=r,
+                            message=f"lease {lid} released {rel} slab "
+                                    f"pages but acquired {st['pages']} — "
+                                    f"block-table pages leaked or "
+                                    f"double-counted"))
         elif kind == "decode":
             r = int(g(e, "replica", -1))
             if r in kv_replicas and not kv_seen.get(r):
@@ -388,6 +451,12 @@ def check_events(events: Iterable, *, drained: bool = False,
                     HELD_AT_DRAIN, replica=r,
                     message=f"{bal} kv lease(s) still outstanding after "
                             f"drain"))
+        if "kv" in must_drain:
+            for (r, lid), st in sorted(paged_open.items()):
+                v(InvariantViolation(
+                    HELD_AT_DRAIN, replica=r,
+                    message=f"paged lease {lid} still open after drain "
+                            f"({st['pages']} slab pages held)"))
 
     rep.outstanding = {f"r{r}:{o}": bal
                        for (r, o), bal in sorted(pages_out.items()) if bal}
@@ -397,6 +466,7 @@ def check_events(events: Iterable, *, drained: bool = False,
         "transfers": len(land_t),
         "waves_dispatched": len(dispatch),
         "requests": len(first),
+        "paged_leases": len(paged_done) + len(paged_open),
         "pool_edges": sum(1 for e in evs
                           if str(g(e, "kind", "")).startswith("pool.")),
     }

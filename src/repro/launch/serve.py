@@ -18,6 +18,14 @@ default the server runs per-request continuous batching
 waves re-form at every round frontier, so a slow request's batch-mates
 move on without it and late arrivals join in-flight decode batches.
 
+The decode hook is a ``serving.DecodeRunner``: by default it runs on
+the **paged KV substrate** — each wave leases a block table over a
+shared page slab (``acquire_paged``) and every step attends through
+``kernels.ops.flash_decode_paged`` (``--dense-decode`` pins the legacy
+dense ``[B, max_len]`` bucket path).  Either way the lease draws from
+the engine's shared HBM pool, so prefetch pages and decode KV are
+accounted against the same ledger.
+
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
       --pipeline hyde --requests 8
 """
@@ -29,15 +37,14 @@ import time
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 import repro.core as core
 from repro.configs import get_arch
 from repro.launch import env as launch_env
 from repro.models import transformer as tf
 from repro.obs import SystemClock, analyze, write_jsonl, write_trace
-from repro.serving import (DecodeEvent, EngineConfig, KVCacheManager,
-                           RagRequest, TeleRAGServer, make_traces, sample,
+from repro.serving import (DecodeRunner, EngineConfig, KVCacheManager,
+                           RagRequest, TeleRAGServer, make_traces,
                            summarize_latency)
 
 
@@ -54,6 +61,10 @@ def main():
     ap.add_argument("--static-groups", action="store_true",
                     help="legacy group-granular execution instead of "
                          "per-request continuous batching")
+    ap.add_argument("--dense-decode", action="store_true",
+                    help="decode on the legacy dense [B, max_len] KV "
+                         "bucket path instead of the paged block-table "
+                         "substrate (EngineConfig.paged_decode=False)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the run's flight-recorder stream as "
                          "Chrome/Perfetto trace-event JSON (load in "
@@ -76,45 +87,20 @@ def main():
     arch_full = get_arch(args.arch)
     cfg = arch_full.reduced()
     params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
-    step = jax.jit(lambda p, c, i: tf.serve_step(p, c, i, cfg))
 
     # one shared HBM page pool: prefetch pages + KV leases draw from (and
     # are ledger-accounted against) the same slab, so size it for both
     kv_bytes = KVCacheManager(cfg).nbytes(args.batch, 128)
     page_bytes = index.paged.page_nbytes()
 
-    def decode_hook(replica, records, gen_tokens, rnd):
-        """REAL pre-retrieval decode for this wave — runs while the
-        wave's prefetch copy (dispatched just before, once, by the
-        policy) is still in flight.  Returns per-request DecodeEvents:
-        the measured per-step wall time drives each member's generation
-        window on the event clock (async decode as the clock source,
-        not the trace's static estimate)."""
-        n = len(records)
-        steps = min(max(gen_tokens, default=0), 32)
-        lease = kv.acquire(n, 128, fresh=True, tenant=records[0].tenant)
-        try:
-            tok = jnp.zeros((n,), jnp.int32)
-            t0 = time.perf_counter()
-            logits = None
-            for t in range(steps):
-                logits, lease.cache = step(
-                    params, lease.cache,
-                    {"token": tok,
-                     "pos": jnp.full((n,), t, jnp.int32)})
-                tok = sample(logits)
-            if logits is not None:
-                jax.block_until_ready(tok)
-            per_step = (time.perf_counter() - t0) / max(steps, 1)
-        finally:
-            # a raising decode step must still hand the bucket back for
-            # recycling — leaked KV leases shrink the shared pool until
-            # admission starves (telint TL001)
-            kv.release(lease)
-        return [DecodeEvent(request_id=r.request_id,
-                            tokens=min(g, steps) if g else 0,
-                            seconds=per_step * (min(g, steps) if g else 0))
-                for r, g in zip(records, gen_tokens)]
+    # REAL pre-retrieval decode for each wave — runs while the wave's
+    # prefetch copy (dispatched just before, once, by the policy) is
+    # still in flight.  Paged block-table KV by default; the runner
+    # leases per wave, releases in finally, and returns per-request
+    # DecodeEvents whose measured per-step wall time drives each
+    # member's generation window on the event clock.
+    runner = DecodeRunner(params, cfg, max_len=128, max_steps=32,
+                          slab_seqs=max(2 * args.batch, 8))
 
     # real serving driver: inject the REAL wall clock — scheduler
     # overhead and t_cc calibration should measure this machine here
@@ -123,11 +109,12 @@ def main():
         nprobe=args.nprobe, top_k=3, buffer_pages=512,
         pool_pages=512 + -(-kv_bytes // page_bytes),
         lookahead_rank=min(2 * args.nprobe, args.clusters),
-        kernel_mode="ref", cache_enabled=True, chips=4), 1, arch_full,
-        micro_batch=args.batch, include_tail=True, decode_hook=decode_hook,
+        kernel_mode="ref", cache_enabled=True, chips=4,
+        paged_decode=not args.dense_decode), 1, arch_full,
+        micro_batch=args.batch, include_tail=True, decode_hook=runner,
         continuous=not args.static_groups, wall_clock=SystemClock())
+    runner.attach(srv)
     eng = srv.engines[0]
-    kv = KVCacheManager(cfg, pool=eng.pool)
     eng.calibrate_tcc()
 
     rng = np.random.default_rng(args.seed + 1)
@@ -150,7 +137,9 @@ def main():
     print(f"# {len(responses)} requests in {wall:.1f}s "
           f"({len(responses)/wall:.2f} req/s real wall on CPU); "
           f"h2d={eng.buffer.stats.bytes_h2d/1e6:.1f}MB "
-          f"cache_hit={eng.cache.hit_rate:.0%}")
+          f"cache_hit={eng.cache.hit_rate:.0%} "
+          f"decode={'paged' if runner.paged else 'dense'} "
+          f"(waves={runner.stats['paged_waves'] or runner.stats['dense_waves']})")
     print(f"# event-clock {summarize_latency(responses)}")
     print(srv.telemetry().summary())
     print(analyze(srv.recorder).summary())

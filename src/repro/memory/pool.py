@@ -71,7 +71,17 @@ def _round_up_pow2(n: int, lo: int = 8) -> int:
 
 
 class PoolExhausted(RuntimeError):
-    """Raised when a caller demands pages the pool cannot supply."""
+    """Raised when a caller demands pages the pool cannot supply.
+
+    ``bytes_needed`` > 0 marks a *pool-bytes* shortfall — one that
+    evicting cold unpinned prefetch residency could cure (the runtime
+    spills toward it before shedding a decode wave).  Structural
+    exhaustion (e.g. a KV slab's free list) leaves it 0: no eviction
+    can help, only a future release."""
+
+    def __init__(self, msg: str, *, bytes_needed: int = 0):
+        super().__init__(msg)
+        self.bytes_needed = bytes_needed
 
 
 @dataclass(eq=False)

@@ -29,8 +29,9 @@ from repro.models import mamba2 as mamba_mod
 from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
 from repro.models import rwkv6 as rwkv_mod
-from repro.models.layers import (AxesMaker, InitMaker, Maker, cross_entropy_loss,
-                                 mlp_forward, mlp_params, rms_norm, softcap)
+from repro.models.layers import (AxesMaker, InitMaker, Maker, apply_rope,
+                                 cross_entropy_loss, mlp_forward, mlp_params,
+                                 rms_norm, softcap)
 
 Params = Dict[str, Any]
 
@@ -801,3 +802,86 @@ def serve_step(params: Params, cache: Params, inputs: Dict[str, jax.Array],
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed(params, x[:, 0, :], cfg)
     return logits, cache
+
+
+def serve_step_paged(params: Params, k_slab: jax.Array, v_slab: jax.Array,
+                     block_table: jax.Array, lengths: jax.Array,
+                     inputs: Dict[str, jax.Array], cfg: ArchConfig, *,
+                     kernel_mode: Optional[str] = None,
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step over **paged** (block-table) KV — the serving
+    path's PagedAttention form of ``serve_step``.
+
+    k_slab/v_slab: the ``KVPageSlab`` arrays [L, NP, ps, KVH, Dh] (all
+    layers stacked); block_table: [B, max_blocks] int32 slab page slots
+    (a ``PagedCacheLease.device_tables()`` view); lengths: [B] int32
+    tokens already written per sequence — the new token is scattered at
+    position ``lengths`` through the block table (the in-jit half of
+    ``KVCacheManager.append_paged``; the caller advances the lease's
+    host-side lengths afterwards) and attended in place with
+    ``kernels.ops.flash_decode_paged``.  inputs: token [B].
+
+    Returns (logits [B, V], k_slab, v_slab).  Plain global-causal GQA
+    attention archs only (the same restriction as
+    ``KVCacheManager.init_paged``); sliding-window / split-cache / MLA /
+    SSM families stay on the dense ``serve_step``.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    if (family_kind(cfg) != "attn" or cfg.attn_kind != "gqa"
+            or cfg.local_global_pattern or cfg.sliding_window):
+        raise ValueError(
+            "serve_step_paged supports plain global-causal GQA archs only "
+            f"(family {family_kind(cfg)!r}, attn_kind {cfg.attn_kind!r})")
+    mode = kernel_ops.DEFAULT_MODE if kernel_mode is None else kernel_mode
+
+    tok = inputs["token"]
+    x = embed_tokens(params, tok[:, None], cfg)
+    B = x.shape[0]
+    L = cfg.num_layers
+    H, KVH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ps = k_slab.shape[2]
+    positions = lengths[:, None]                       # new token's position
+    slot = jnp.take_along_axis(block_table,
+                               (lengths // ps)[:, None], axis=1)[:, 0]
+    off = lengths % ps
+
+    # same carry/in-place-update discipline as the dense serve_step: the
+    # slab rides the scan carry and each layer's page view is updated
+    # with dynamic_update_index_in_dim so XLA single-buffers it
+    def body(carry, xs):
+        h, ks, vs = carry
+        lp, li = xs
+        ap = lp["attn"]
+        a_in = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", a_in, ap["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", a_in, ap["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", a_in, ap["wv"])
+        q = apply_rope(q, positions, fraction=cfg.rope_fraction,
+                       theta=cfg.rope_theta)
+        k = apply_rope(k, positions, fraction=cfg.rope_fraction,
+                       theta=cfg.rope_theta)
+        kl = jax.lax.dynamic_index_in_dim(ks, li, keepdims=False)
+        vl = jax.lax.dynamic_index_in_dim(vs, li, keepdims=False)
+        kl = kl.at[slot, off].set(k[:, 0].astype(kl.dtype))
+        vl = vl.at[slot, off].set(v[:, 0].astype(vl.dtype))
+        ks = jax.lax.dynamic_update_index_in_dim(ks, kl, li, 0)
+        vs = jax.lax.dynamic_update_index_in_dim(vs, vl, li, 0)
+        out = kernel_ops.flash_decode_paged(
+            q[:, 0].reshape(B, KVH, H // KVH, Dh), kl, vl,
+            block_table, lengths + 1, mode=mode)
+        out = out.reshape(B, 1, H, Dh).astype(h.dtype)
+        h = h + jnp.einsum("bshk,hkd->bsd", out, ap["wo"])
+        m_in = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.moe is not None:
+            m_out, _ = moe_mod.moe_forward(lp["mlp"], m_in, cfg)
+        else:
+            m_out = mlp_forward(lp["mlp"], m_in, cfg.mlp_act, cfg.mlp_gated)
+        return (h + m_out, ks, vs), None
+
+    (x, k_slab, v_slab), _ = jax.lax.scan(
+        body, (x, k_slab, v_slab),
+        (params["layers"], jnp.arange(L, dtype=jnp.int32)))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x[:, 0, :], cfg)
+    return logits, k_slab, v_slab

@@ -137,12 +137,22 @@ class PoolEvent(TraceEvent):
 
 @dataclass(frozen=True)
 class KVEvent(TraceEvent):
-    """One decode-cache lease edge (``kv.acquire`` / ``kv.release``):
-    the KV manager's view on top of the pool's byte accounting."""
+    """One decode-cache lease edge (``kv.acquire`` / ``kv.append`` /
+    ``kv.release``): the KV manager's view on top of the pool's byte
+    accounting.  Dense bucket leases emit acquire/release with
+    ``lease_id=-1``; paged (block-table) leases additionally carry a
+    globally unique ``lease_id``, their slab page count (``pages``) and
+    — on every ``kv.append`` — the post-append max sequence ``length``,
+    which is what the invariant checker conserves (page conservation
+    per lease, append-within-lease ordering, no append past
+    ``max_len``)."""
 
     batch: int = 0
     max_len: int = 0
     nbytes: int = 0
+    lease_id: int = -1                # paged leases only; -1 = dense bucket
+    pages: int = 0                    # slab page slots held by the lease
+    length: int = 0                   # kv.append: max lengths after the write
 
 
 @dataclass(frozen=True)

@@ -4,6 +4,7 @@ from repro.serving.api import (RagRequest, RagResponse, ReplicaTelemetry,
                                summarize_latency)
 from repro.serving.engine import (EngineConfig, RequestResult, RoundTelemetry,
                                   TeleRAGEngine)
+from repro.serving.decode import DecodeRunner, supports_paged_decode
 from repro.serving.kv_cache import (CacheLease, KVCacheManager, KVPageSlab,
                                     PagedCacheLease)
 from repro.serving.pipelines import (GlobalBatchReport,
@@ -22,6 +23,7 @@ __all__ = [
     "RagRequest", "RagResponse", "ReplicaTelemetry", "ServerTelemetry",
     "TeleRAGServer", "TenantTelemetry", "WaveDispatch", "summarize_latency",
     "EngineConfig", "RequestResult", "RoundTelemetry", "TeleRAGEngine",
+    "DecodeRunner", "supports_paged_decode",
     "CacheLease", "KVCacheManager", "KVPageSlab", "PagedCacheLease",
     "GlobalBatchReport", "MultiReplicaOrchestrator", "PipelineExecutor",
     "PIPELINE_NAMES",

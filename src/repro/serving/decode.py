@@ -1,0 +1,203 @@
+"""The engine decode plumbing behind ``on_generate``: one reusable
+decode-hook object for serve drivers, tests and benchmarks.
+
+``DecodeRunner`` is the real-decode hook the serving front-end wires as
+each runtime's ``on_generate``: at every round frontier it leases KV for
+the wave, runs actual reduced-model decode steps while the wave's
+lookahead copy is in flight, and returns per-request ``DecodeEvent``s —
+async decode as the clock source.
+
+By default (``EngineConfig.paged_decode=True``) decode runs on the
+**paged substrate**: the wave's KV is a ``PagedCacheLease`` block table
+over the manager's shared page slab (``acquire_paged``), every step goes
+through ``transformer.serve_step_paged`` — which scatters the new K/V
+through the block table in-jit and attends with
+``kernels.ops.flash_decode_paged`` — and ``append_paged`` advances the
+lease (emitting the ``kv.append`` trace edge the invariant checker
+orders).  ``paged_decode=False`` pins the legacy dense ``[B, max_len]``
+bucket path (``acquire``/``serve_step``).  Both paths release in
+``finally`` (telint TL001) and tenant-tag the lease (TL004), so the
+wave's decode state is pool/ledger-accounted either way.
+
+``PoolExhausted`` from ``acquire_paged`` deliberately propagates: the
+``RetrievalRuntime`` catches it at the round frontier, sheds what fits
+and parks the rest ``PRESSURE_STALLED`` to rejoin on page-free — KV
+pressure is an admission decision, not a hook crash.
+
+Timing comes from an injected clock (``attach`` adopts the server's
+``wall_clock``): launch drivers inject ``SystemClock`` for real
+measurement; the library default is the deterministic event clock, which
+is what lets tests pin paged==dense telemetry exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.serving.kv_cache import KVCacheManager
+from repro.serving.runtime import DecodeEvent
+from repro.serving.sampler import sample
+
+
+def supports_paged_decode(cfg: ArchConfig) -> bool:
+    """True iff the arch can decode through block-table KV: plain
+    global-causal GQA attention (the ``init_paged`` /
+    ``serve_step_paged`` restriction) — sliding-window, split-cache,
+    MLA and SSM families stay dense."""
+    return (tf.family_kind(cfg) == "attn" and cfg.has_attention
+            and cfg.attn_kind == "gqa" and not cfg.local_global_pattern
+            and not cfg.sliding_window)
+
+
+class DecodeRunner:
+    """Reusable ``decode_hook(replica, records, gen_tokens, rnd)``:
+    per-wave KV lease + real model decode steps, paged by default.
+
+    Construct with the reduced arch's params, pass as the server's
+    ``decode_hook``, then ``attach(server)`` so the runner can build one
+    pool-backed ``KVCacheManager`` per replica engine (and adopt the
+    server's wall clock and each engine's ``paged_decode`` /
+    ``kernel_mode`` config)."""
+
+    def __init__(self, params, cfg: ArchConfig, *, max_len: int = 128,
+                 max_steps: int = 32, page_size: int = 16,
+                 slab_seqs: int = 16,
+                 paged: Optional[bool] = None):
+        """``paged=None`` defers to ``EngineConfig.paged_decode`` at
+        ``attach`` time (ANDed with arch support); an explicit bool
+        overrides the engine config.  ``slab_seqs`` sizes the paged KV
+        slab: page slots for that many concurrent ``max_len``
+        sequences."""
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.max_steps = max_steps
+        self.page_size = page_size
+        self.slab_seqs = slab_seqs
+        self._paged_override = paged
+        self.paged = bool(paged) and supports_paged_decode(cfg)
+        self.clock = None                      # attach() adopts server.wall
+        self._kv: Dict[int, KVCacheManager] = {}
+        self._dense_step = None
+        self._paged_step = None
+        # per-request generated tokens, per round: the differential
+        # parity suite pins these exactly equal across paged/dense runs
+        self.generated: Dict[int, List[Tuple[int, ...]]] = {}
+        self.stats = {"paged_waves": 0, "dense_waves": 0,
+                      "paged_appends": 0, "dense_steps": 0}
+
+    # -- wiring --------------------------------------------------------------
+    def attach(self, server) -> "DecodeRunner":
+        """Bind to a constructed ``TeleRAGServer``: one pool-backed KV
+        manager per replica engine (paged mode also allocates the slab),
+        clock from the server's ``wall_clock`` injection point."""
+        self.clock = server.wall
+        eng0 = server.engines[0]
+        want = (eng0.cfg.paged_decode if self._paged_override is None
+                else self._paged_override)
+        self.paged = bool(want) and supports_paged_decode(self.cfg)
+        self._kernel_mode = eng0.cfg.kernel_mode
+        for r, eng in enumerate(server.engines):
+            kv = KVCacheManager(self.cfg, pool=eng.pool)
+            if self.paged:
+                blocks = -(-self.max_len // self.page_size)
+                kv.init_paged(num_pages=self.slab_seqs * blocks,
+                              page_size=self.page_size)
+            self._kv[r] = kv
+        if self.paged:
+            cfg, mode = self.cfg, self._kernel_mode
+            self._paged_step = jax.jit(
+                lambda p, k, v, bt, lens, tok: tf.serve_step_paged(
+                    p, k, v, bt, lens, {"token": tok}, cfg,
+                    kernel_mode=mode),
+                donate_argnums=(1, 2))
+        else:
+            cfg = self.cfg
+            self._dense_step = jax.jit(
+                lambda p, c, i: tf.serve_step(p, c, i, cfg))
+        return self
+
+    def kv(self, replica: int = 0) -> KVCacheManager:
+        """The replica's KV manager (attach() must have run)."""
+        return self._kv[replica]
+
+    # -- the hook ------------------------------------------------------------
+    def __call__(self, replica: int, records, gen_tokens, rnd: int,
+                 ) -> List[DecodeEvent]:
+        """Decode this wave for real: ``steps`` tokens for the whole
+        batch on leased KV, measured on the injected clock.  Returns
+        one ``DecodeEvent`` per member (observed steps + seconds)."""
+        if self.clock is None:
+            raise RuntimeError("DecodeRunner.attach(server) before serving")
+        n = len(records)
+        steps = min(max(gen_tokens, default=0), self.max_steps)
+        kv = self._kv[replica]
+        tenant = records[0].tenant
+        if self.paged:
+            toks, per_step = self._run_paged(kv, n, steps, tenant)
+        else:
+            toks, per_step = self._run_dense(kv, n, steps, tenant)
+        for j, r in enumerate(records):
+            self.generated.setdefault(r.request_id, []).append(
+                tuple(int(t[j]) for t in toks))
+        return [DecodeEvent(request_id=r.request_id,
+                            tokens=min(g, steps) if g else 0,
+                            seconds=per_step * (min(g, steps) if g else 0))
+                for r, g in zip(records, gen_tokens)]
+
+    def _run_paged(self, kv: KVCacheManager, n: int, steps: int,
+                   tenant: str):
+        """Block-table decode: acquire_paged -> (serve_step_paged +
+        append_paged) per step -> release_paged.  ``PoolExhausted``
+        from the acquire propagates to the runtime's shed/park path."""
+        self.stats["paged_waves"] += 1
+        lease = kv.acquire_paged(n, self.max_len, tenant=tenant)
+        toks: List[jax.Array] = []
+        try:
+            tok = jnp.zeros((n,), jnp.int32)
+            t0 = self.clock.perf()
+            for _ in range(steps):
+                bt, lens = lease.device_tables()
+                logits, kv.slab.k, kv.slab.v = self._paged_step(
+                    self.params, kv.slab.k, kv.slab.v, bt, lens, tok)
+                kv.append_paged(lease)      # scatter was fused in-jit
+                self.stats["paged_appends"] += 1
+                tok = sample(logits)
+                toks.append(tok)
+            if toks:
+                jax.block_until_ready(toks[-1])
+            per_step = (self.clock.perf() - t0) / max(steps, 1)
+        finally:
+            # a raising decode step must still free the block table —
+            # leaked paged leases shrink the slab AND the shared pool
+            # until admission starves (telint TL001)
+            kv.release_paged(lease)
+        return toks, per_step
+
+    def _run_dense(self, kv: KVCacheManager, n: int, steps: int,
+                   tenant: str):
+        """The pinned legacy path: one dense [n, max_len] bucket."""
+        self.stats["dense_waves"] += 1
+        lease = kv.acquire(n, self.max_len, fresh=True, tenant=tenant)
+        toks: List[jax.Array] = []
+        try:
+            tok = jnp.zeros((n,), jnp.int32)
+            t0 = self.clock.perf()
+            for t in range(steps):
+                logits, lease.cache = self._dense_step(
+                    self.params, lease.cache,
+                    {"token": tok, "pos": jnp.full((n,), t, jnp.int32)})
+                self.stats["dense_steps"] += 1
+                tok = sample(logits)
+                toks.append(tok)
+            if toks:
+                jax.block_until_ready(toks[-1])
+            per_step = (self.clock.perf() - t0) / max(steps, 1)
+        finally:
+            kv.release(lease)
+        return toks, per_step

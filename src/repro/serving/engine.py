@@ -63,6 +63,9 @@ class EngineConfig:
                                                   # legacy host-mask two-launch)
     cache: CacheConfig = field(default_factory=CacheConfig)
     cache_enabled: bool = False                   # paper: off on single GPU
+    paged_decode: bool = True                     # serve decode over block-
+                                                  # table KV (False pins the
+                                                  # legacy dense [B,S] path)
     hw: HardwareProfile = TPU_V5E
     chips: int = 1
     t_cc: Optional[float] = None                  # None => bytes/host_mem_bw
@@ -313,6 +316,7 @@ class TeleRAGEngine:
 
     def lookahead_ex(self, q_in: np.ndarray, gen_tokens: Sequence[int], *,
                      now: float = 0.0, plan=None, ticket=None,
+                     tenant: str = "shared",
                      ) -> Tuple[int, int, Optional[TransferEvent]]:
         """Plan + dispatch prefetch for a micro-batch of q_in embeddings.
 
@@ -326,13 +330,13 @@ class TeleRAGEngine:
         (the runtime reserves before dispatch); direct callers omit them
         and get synchronous spill-or-cap admission."""
         return self.policy.lookahead(self, q_in, gen_tokens, now=now,
-                                     plan=plan, ticket=ticket)
+                                     plan=plan, ticket=ticket, tenant=tenant)
 
-    def lookahead(self, q_in: np.ndarray, gen_tokens: Sequence[int],
-                  ) -> Tuple[int, int]:
+    def lookahead(self, q_in: np.ndarray, gen_tokens: Sequence[int], *,
+                  tenant: str = "shared") -> Tuple[int, int]:
         """Legacy two-value lookahead: (bytes_planned, clusters_fetched)
         with synchronous spill-or-cap admission."""
-        nbytes, nfetch, _ = self.lookahead_ex(q_in, gen_tokens)
+        nbytes, nfetch, _ = self.lookahead_ex(q_in, gen_tokens, tenant=tenant)
         return nbytes, nfetch
 
     def retrieve(self, q_out: np.ndarray, *, now: float = 0.0,

@@ -34,6 +34,7 @@ byte accounting applies per lease.
 from __future__ import annotations
 
 import functools
+import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -80,14 +81,19 @@ class KVCacheManager:
         self.slab: Optional["KVPageSlab"] = None   # init_paged() creates it
 
     def _record(self, kind: str, batch: int, max_len: int, nbytes: int,
-                tenant: str) -> None:
+                tenant: str, *, lease_id: int = -1, pages: int = 0,
+                length: int = 0) -> None:
         """Trace through the pool's recorder lane (the manager has no
-        lane of its own — KV state belongs to the pool's replica)."""
+        lane of its own — KV state belongs to the pool's replica).
+        Paged lease edges carry ``lease_id``/``pages`` (and appends the
+        post-write ``length``) so the invariant checker can conserve
+        pages per lease and pin the acquire→append→release order."""
         rec = self.pool.recorder if self.pool is not None else None
         if rec is not None:
             rec.emit(KVEvent(t=rec.now, kind=kind,
                              replica=self.pool.replica_id, tenant=tenant,
-                             batch=batch, max_len=max_len, nbytes=nbytes))
+                             batch=batch, max_len=max_len, nbytes=nbytes,
+                             lease_id=lease_id, pages=pages, length=length))
 
     def acquire(self, batch: int, max_len: int, *, fresh: bool = False,
                 tenant: str = "shared") -> CacheLease:
@@ -115,7 +121,8 @@ class KVCacheManager:
                     raise PoolExhausted(
                         f"kv cache {key} needs {nbytes} bytes; pool has "
                         f"{self.pool.reservable_pages()} reservable pages "
-                        f"of {self.pool.page_nbytes} bytes")
+                        f"of {self.pool.page_nbytes} bytes",
+                        bytes_needed=nbytes)
             try:
                 cache = tf.init_cache(self.cfg, batch, max_len, self.dtype)
             except BaseException:
@@ -238,32 +245,47 @@ class KVCacheManager:
                 raise PoolExhausted(
                     f"paged kv cache ({batch}, {max_len}) needs {nbytes} "
                     f"bytes; pool has {self.pool.reservable_pages()} "
-                    f"reservable pages of {self.pool.page_nbytes} bytes")
+                    f"reservable pages of {self.pool.page_nbytes} bytes",
+                    bytes_needed=nbytes)
         slots = [slab.free.pop() for _ in range(need)]
         bt = np.asarray(slots, np.int32).reshape(batch, max_blocks)
-        self._record("kv.acquire", batch, max_len, nbytes, tenant)
+        lease_id = next(_LEASE_IDS)
+        self._record("kv.acquire", batch, max_len, nbytes, tenant,
+                     lease_id=lease_id, pages=need)
         return PagedCacheLease(block_table=bt,
                                lengths=np.zeros(batch, np.int32),
                                batch=batch, max_len=max_len, nbytes=nbytes,
-                               page_lease=page_lease, tenant=tenant)
+                               page_lease=page_lease, tenant=tenant,
+                               lease_id=lease_id)
 
-    def append_paged(self, lease: "PagedCacheLease", k_new: jax.Array,
-                     v_new: jax.Array) -> None:
-        """Write one decode step's K/V (``[L, B, KVH, Dh]``) at each
+    def append_paged(self, lease: "PagedCacheLease",
+                     k_new: Optional[jax.Array] = None,
+                     v_new: Optional[jax.Array] = None) -> None:
+        """Advance the lease by one decode step.  With ``k_new``/``v_new``
+        (``[L, B, KVH, Dh]``) the step's K/V is written at each
         sequence's current length through the block table (donated
-        in-place scatter — the slab is never copied) and advance
-        ``lease.lengths``."""
+        in-place scatter — the slab is never copied).  Without them the
+        scatter already happened inside the fused serve step
+        (``transformer.serve_step_paged`` writes through the same block
+        table in-jit) and this call is the accounting half: bounds
+        check, length advance, and the ``kv.append`` trace edge the
+        invariant checker orders between acquire and release."""
         slab = self._require_slab()
         ps = slab.page_size
         if int(lease.lengths.max(initial=0)) >= lease.max_len:
             raise ValueError(f"paged lease full at max_len={lease.max_len}")
-        slots = lease.block_table[np.arange(lease.batch),
-                                  lease.lengths // ps]
-        offs = lease.lengths % ps
-        slab.k, slab.v = _append_token(
-            slab.k, slab.v, jnp.asarray(k_new), jnp.asarray(v_new),
-            jnp.asarray(slots), jnp.asarray(offs, np.int32))
+        if k_new is not None:
+            slots = lease.block_table[np.arange(lease.batch),
+                                      lease.lengths // ps]
+            offs = lease.lengths % ps
+            slab.k, slab.v = _append_token(
+                slab.k, slab.v, jnp.asarray(k_new), jnp.asarray(v_new),
+                jnp.asarray(slots), jnp.asarray(offs, np.int32))
         lease.lengths += 1
+        self._record("kv.append", lease.batch, lease.max_len, 0,
+                     lease.tenant, lease_id=lease.lease_id,
+                     pages=lease.block_table.size,
+                     length=int(lease.lengths.max(initial=0)))
 
     def release_paged(self, lease: "PagedCacheLease") -> int:
         """Return the lease's slab pages to the free list and release
@@ -272,9 +294,11 @@ class KVCacheManager:
         rebuild; the slab itself stays allocated)."""
         slab = self._require_slab()
         slab.free.extend(int(s) for s in lease.block_table.reshape(-1))
+        pages = lease.block_table.size
         lease.block_table = np.full_like(lease.block_table, -1)
         self._record("kv.release", lease.batch, lease.max_len,
-                     lease.nbytes, lease.tenant)
+                     lease.nbytes, lease.tenant, lease_id=lease.lease_id,
+                     pages=pages)
         if lease.page_lease is not None and self.pool is not None:
             self.pool.release(lease.page_lease)
             lease.page_lease = None
@@ -285,6 +309,12 @@ class KVCacheManager:
             raise RuntimeError("call init_paged(num_pages) before using "
                                "the paged KV API")
         return self.slab
+
+
+# paged lease ids are process-global (not per manager): the invariant
+# checker keys page conservation on (replica, lease_id), and one replica
+# may host several managers
+_LEASE_IDS = itertools.count()
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))
@@ -334,6 +364,7 @@ class PagedCacheLease:
     nbytes: int = 0
     page_lease: Optional[PageLease] = None
     tenant: str = "shared"
+    lease_id: int = -1                 # globally unique (trace correlation)
 
     def device_tables(self) -> Tuple[jax.Array, jax.Array]:
         """(block_table, lengths) as device arrays for the kernel."""

@@ -76,9 +76,12 @@ class RetrievalPolicy:
                   gen_tokens: Sequence[int], *, now: float = 0.0,
                   plan: Optional[PrefetchPlan] = None,
                   ticket: Optional[AdmissionTicket] = None,
+                  tenant: str = "shared",
                   ) -> Tuple[int, int, Optional[TransferEvent]]:
         """Plan + dispatch prefetch. Returns (bytes_planned, clusters,
-        transfer event). Non-prefetching policies are a no-op."""
+        transfer event). Non-prefetching policies are a no-op.
+        ``tenant`` is who a direct caller's synchronous admission (no
+        precomputed ``ticket``) charges its reservation to."""
         return 0, 0, None
 
     def retrieve(self, engine: "TeleRAGEngine", q_out: np.ndarray, *,
@@ -180,16 +183,19 @@ class TeleRAGPolicy(RetrievalPolicy):
         return plan
 
     def lookahead(self, engine, q_in, gen_tokens, *, now=0.0, plan=None,
-                  ticket=None):
+                  ticket=None, tenant="shared"):
         if plan is None:
             plan = self.plan(engine, q_in, gen_tokens)
         if ticket is None:
             # direct (non-runtime) callers cannot park on an event queue:
             # admit synchronously — spill, or cap with the shortfall on
             # the admission stats rather than dropping clusters silently
+            # (tenant-attributed, so a direct caller's burst still counts
+            # against its own floor/ceiling, not the shared sentinel's)
             ticket = engine.admission.admit(plan.pages_planned,
                                             owner="lookahead",
-                                            can_wait=False)
+                                            can_wait=False,
+                                            tenant=tenant)
         if ticket.capped and ticket.pages_granted < plan.pages_planned:
             plan = self.plan(engine, q_in, gen_tokens,
                              free_pages=ticket.pages_granted,

@@ -75,6 +75,7 @@ import numpy as np
 
 from repro.core.embedder import synthetic_rewrite
 from repro.core.schedulers import SchedulerPolicy
+from repro.memory.pool import PoolExhausted
 from repro.obs.recorder import (DecodeStep, FlightRecorder, RequestEvent,
                                 SpanEvent, WaveEvent)
 from repro.serving.engine import (RequestResult, RoundTelemetry,
@@ -241,6 +242,12 @@ class _Wave:
     members: List[RequestRecord]
     rounds: List[int]                     # per-member round index
     tenant: str = "shared"
+    # parked by KV-slab pressure (decode hook's acquire_paged failed):
+    # on resume EVERY member re-enters the ready set — including
+    # tail-only members, whose decode also never ran (an admission park
+    # runs tails as their own wave before parking, so those stay
+    # excluded from the wake)
+    kv_parked: bool = False
 
     @property
     def request_ids(self) -> Tuple[int, ...]:
@@ -652,6 +659,8 @@ class RetrievalRuntime:
         #    its own completion event.
         plan = ticket = None
         act_q = None
+        hit_pins: List[object] = []
+        fetch_pins: List[object] = []
         keys = tuple(members[j] for j in ret)
         if ret:
             act_q = np.stack([members[j].cur_q for j in ret])
@@ -732,7 +741,7 @@ class RetrievalRuntime:
                 else:
                     nbytes, nfetch, ev = eng.lookahead_ex(
                         act_q, [gen_tokens[j] for j in ret], now=now,
-                        plan=plan, ticket=ticket)
+                        plan=plan, ticket=ticket, tenant=wave.tenant)
             self.recorder.emit(WaveEvent(
                 t=now, kind="wave.dispatch", replica=self.replica_id,
                 wave_id=wave.wid, tenant=wave.tenant, size=batch,
@@ -742,17 +751,30 @@ class RetrievalRuntime:
             if plan is not None:
                 # each member owns its share of the fetched set too,
                 # until its own completion event
-                for m, cs in zip(keys, fetch_sets):
-                    eng.buffer.pin_clusters(m, cs)
+                fetch_pins = [eng.buffer.pin_clusters(m, cs)
+                              for m, cs in zip(keys, fetch_sets)]
 
             # 1b) real decode (serve drivers): the copy dispatched above
             #     is in flight while the hook's device steps run;
             #     observed per-request DecodeEvents replace the modeled
-            #     windows
+            #     windows.  KV pressure inside the hook (acquire_paged
+            #     against an exhausted slab/pool) is an admission
+            #     decision, not a crash: shed what fits, park the rest
+            #     PRESSURE_STALLED to rejoin on page-free.
             decode_evs: Optional[List[DecodeEvent]] = None
             if self.on_generate is not None and (ret or any(gen_tokens)):
-                evs = self.on_generate(list(members), list(gen_tokens),
-                                       rounds[0])
+                try:
+                    evs = self._generate_with_kv_relief(
+                        members, gen_tokens, rounds[0], tenant=wave.tenant)
+                except PoolExhausted:
+                    if cohort is not None:
+                        # never-re-form mode: cohorts cannot split or
+                        # dissolve, so pressure cannot shed or park
+                        raise
+                    self._shed_on_kv_pressure(
+                        wave, keys, hit_pins, fetch_pins, ticket,
+                        now=now, starts=starts)
+                    return
                 if evs is not None:
                     if len(evs) != batch:
                         raise ValueError(
@@ -926,6 +948,81 @@ class RetrievalRuntime:
             cohort.scheduled_rounds.add(rounds[0] + 1)
             self._push(min(continuing), "round", (cohort, rounds[0] + 1))
 
+    def _generate_with_kv_relief(self, members, gen_tokens, rnd: int, *,
+                                 tenant: str):
+        """Run the decode hook; on a *pool-bytes* shortfall
+        (``PoolExhausted.bytes_needed > 0``) evict cold unpinned
+        prefetch residency toward the failed lease's size and retry
+        once.  With paged decode the KV bytes return to the pool
+        between waves, so warm prefetch residency physically creeps
+        into them (the dense bucket held its pages forever and never
+        exposed this) — the cold tail is exactly what ``plannable_pages``
+        already promised generation state could reclaim.  Slab
+        free-list exhaustion (``bytes_needed == 0``) is not curable by
+        eviction and propagates to the shed/park path, as does a
+        second failure after the spill."""
+        try:
+            return self.on_generate(list(members), list(gen_tokens), rnd)
+        except PoolExhausted as exc:
+            needed = getattr(exc, "bytes_needed", 0)
+            if needed <= 0:
+                raise
+            eng = self.engine
+            # the lease draws on *reservable* pages (free minus in-flight
+            # admission reservations), so spill until the free list
+            # covers the lease on top of everything already reserved
+            pages = (-(-needed // eng.pool.page_nbytes)
+                     + eng.pool.reserved_pages())
+            eng.cache.make_room(eng.buffer, pages,
+                                protect=eng.admission.spill_protect(tenant))
+            return self.on_generate(list(members), list(gen_tokens), rnd)
+
+    def _shed_on_kv_pressure(self, wave: _Wave, keys, hit_pins, fetch_pins,
+                             ticket, *, now: float,
+                             starts: Sequence[float]) -> None:
+        """The decode hook's ``acquire_paged`` failed at this wave's
+        round frontier: the KV slab/pool cannot hold the whole batch's
+        block tables.  Shed half — the older half re-executes right now
+        as its own smaller wave (re-planned from scratch; still too big
+        and it sheds again, down to one), the younger half parks
+        ``PRESSURE_STALLED`` and rejoins on the page-free event the
+        running half's ``release_paged`` fires.  A singleton wave has
+        no half to run: it parks whole — sound exactly when some OTHER
+        holder will free pages through a future event (another wave's
+        pins, an open KV lease, an outstanding reservation; checked
+        after dropping this wave's own holds so they don't count as
+        their own rescue).  With no such holder the exhaustion is
+        structural and the original ``PoolExhausted`` propagates.  The
+        original wave dissolves exactly like an admission park: this
+        round's tentative pins are dropped, the reservation's remainder
+        is returned, and the wave leaves the log (it never executed)."""
+        eng = self.engine
+        for m, pins in zip(keys, hit_pins):
+            eng.buffer.release_pins(m, pins)
+        for m, pins in zip(keys, fetch_pins):
+            eng.buffer.release_pins(m, pins)
+        if ticket is not None:
+            # lookahead_ex commits on its own paths; pool.cancel is
+            # idempotent so a second commit is a no-op
+            eng.admission.commit(ticket)
+        self.wave_log.remove(wave)
+        keep = len(wave.members) // 2
+        if keep == 0 and not eng.admission.holds_pending_release():
+            raise       # re-raises the in-flight PoolExhausted
+        parked = _Wave(wid=wave.wid, t=now, members=wave.members[keep:],
+                       rounds=wave.rounds[keep:], tenant=wave.tenant,
+                       kv_parked=True)
+        eng.admission.park(parked, len(parked.members), tenant=wave.tenant)
+        for m in parked.members:
+            m.state = RequestState.PRESSURE_STALLED
+            self._emit_req(now, "pressure_stall", m, wave_id=parked.wid)
+        if keep:
+            self._exec_wave(
+                _Wave(wid=next(self._wid), t=now,
+                      members=wave.members[:keep],
+                      rounds=wave.rounds[:keep], tenant=wave.tenant),
+                now=now, starts=list(starts[:keep]))
+
     # ---- admission / memory-pressure plumbing ------------------------------
     def _on_pages_freed(self, pages: int) -> None:
         """Pool subscriber: pages returned to the free list wake parked
@@ -945,7 +1042,11 @@ class RetrievalRuntime:
         for key, _npages in self.engine.admission.unpark_all():
             if isinstance(key, _Wave):
                 for j, m in enumerate(key.members):
-                    if key.rounds[j] >= len(m.plan):
+                    # KV-parked waves wake EVERY member: their decode
+                    # (tail members included) never ran.  Admission
+                    # parks ran tail members as their own wave before
+                    # parking, so those stay skipped.
+                    if not key.kv_parked and key.rounds[j] >= len(m.plan):
                         continue
                     rs = m.ready_t
                     if now > rs + 1e-15:

@@ -380,6 +380,108 @@ def test_kv_conservation_and_decode_ordering():
 
 
 # ---------------------------------------------------------------------------
+# Paged-lease discipline: hand-corrupted block-table KV streams
+# ---------------------------------------------------------------------------
+
+
+def _paged_lease_stream(lease_id=5, pages=6, max_len=24, appends=3):
+    """One clean paged lease lifecycle: acquire -> append* -> release,
+    page-conserving, lengths within capacity."""
+    evs = [{"kind": "kv.acquire", "t": 0.0, "replica": 0,
+            "lease_id": lease_id, "pages": pages, "max_len": max_len,
+            "batch": 2, "nbytes": 1000}]
+    for i in range(appends):
+        evs.append({"kind": "kv.append", "t": 0.1 + 0.1 * i, "replica": 0,
+                    "lease_id": lease_id, "pages": pages,
+                    "max_len": max_len, "length": i + 1})
+    evs.append({"kind": "kv.release", "t": 0.9, "replica": 0,
+                "lease_id": lease_id, "pages": pages, "max_len": max_len,
+                "nbytes": 1000})
+    return evs
+
+
+def test_clean_paged_lease_stream_passes_drained():
+    rep = check_events(_paged_lease_stream(), drained=True,
+                       must_drain=("kv",))
+    assert rep.ok, rep.summary()
+    assert rep.stats["paged_leases"] == 1
+
+
+def test_paged_append_after_release_is_caught():
+    evs = _paged_lease_stream()
+    evs.append({"kind": "kv.append", "t": 1.0, "replica": 0,
+                "lease_id": 5, "pages": 6, "max_len": 24, "length": 4})
+    rep = check_events(evs)
+    assert rep.of(inv.KV_APPEND_OUT_OF_LEASE), rep.summary()
+
+
+def test_paged_append_before_acquire_is_caught():
+    evs = _paged_lease_stream()
+    evs.insert(0, {"kind": "kv.append", "t": -0.1, "replica": 0,
+                   "lease_id": 5, "pages": 6, "max_len": 24, "length": 1})
+    rep = check_events(evs)
+    assert rep.of(inv.KV_APPEND_OUT_OF_LEASE), rep.summary()
+
+    # an append against a lease id that never existed is just as wrong
+    evs = _paged_lease_stream()
+    evs[1] = dict(evs[1], lease_id=99)
+    rep = check_events(evs)
+    assert rep.of(inv.KV_APPEND_OUT_OF_LEASE), rep.summary()
+
+
+def test_paged_append_past_capacity_is_caught():
+    evs = _paged_lease_stream(max_len=24)
+    next(e for e in evs if e["kind"] == "kv.append")["length"] = 25
+    rep = check_events(evs)
+    assert rep.of(inv.KV_APPEND_OVERFLOW), rep.summary()
+
+
+def test_paged_page_conservation_mismatch_at_release_is_caught():
+    evs = _paged_lease_stream(pages=6)
+    next(e for e in evs if e["kind"] == "kv.release")["pages"] = 5
+    rep = check_events(evs)
+    assert rep.of(inv.KV_PAGE_CONSERVATION), rep.summary()
+
+
+def test_paged_lease_double_release_and_reuse_are_caught():
+    evs = _paged_lease_stream()
+    evs.append(dict(next(e for e in evs if e["kind"] == "kv.release"),
+                    t=1.0))
+    rep = check_events(evs)
+    assert rep.of(inv.KV_DOUBLE_RELEASE), rep.summary()
+
+    # re-acquiring a finished lease id: ids are unique by construction
+    evs = _paged_lease_stream()
+    evs.append(dict(evs[0], t=1.1))
+    rep = check_events(evs)
+    assert rep.of(inv.KV_LEASE_REUSE), rep.summary()
+
+
+def test_open_paged_lease_is_held_at_drain():
+    evs = [e for e in _paged_lease_stream() if e["kind"] != "kv.release"]
+    rep = check_events(evs, drained=True, must_drain=("kv",))
+    assert rep.of(inv.HELD_AT_DRAIN), rep.summary()
+    # same stream is a normal transient while the run is still going,
+    # and legal at drain when kv is not required to empty
+    assert check_events(evs).ok
+    assert check_events(evs, drained=True, must_drain=("prefetch",)).ok
+
+
+def test_dense_lease_events_are_exempt_from_paged_discipline():
+    """Dense bucket leases emit lease_id=-1: none of the paged checks
+    may fire on them (kv.acquire/release counting still applies)."""
+    evs = [
+        {"kind": "kv.acquire", "t": 0.0, "replica": 0, "lease_id": -1},
+        {"kind": "kv.release", "t": 0.2, "replica": 0, "lease_id": -1},
+        {"kind": "kv.acquire", "t": 0.3, "replica": 0, "lease_id": -1},
+        {"kind": "kv.release", "t": 0.5, "replica": 0, "lease_id": -1},
+    ]
+    rep = check_events(evs, drained=True, must_drain=("kv",))
+    assert rep.ok, rep.summary()
+    assert rep.stats["paged_leases"] == 0
+
+
+# ---------------------------------------------------------------------------
 # Invariants on REAL traces: a served run is clean, and the Perfetto
 # export round-trips enough structure for the race/ordering checks
 # ---------------------------------------------------------------------------

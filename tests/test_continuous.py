@@ -540,3 +540,179 @@ def test_continuous_mode_mean_latency_no_worse_than_static(
         assert all(r.state == RequestState.COMPLETE for r in resp)
         means[continuous] = float(np.mean([r.latency_s for r in resp]))
     assert means[True] <= means[False] * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# KV-slab exhaustion mid-decode: shed what fits, park the rest
+# ---------------------------------------------------------------------------
+
+
+def _paged_hook(kv, max_len=32, steps=4):
+    """A decode hook on the real paged KV API (lease accounting only —
+    no model compute): ``acquire_paged`` raises ``PoolExhausted`` when
+    the wave's block tables do not fit the slab."""
+    calls = []
+
+    def hook(records, gen_tokens, rnd):
+        calls.append(len(records))
+        lease = kv.acquire_paged(len(records), max_len,
+                                 tenant=records[0].tenant)
+        try:
+            for _ in range(steps):
+                kv.append_paged(lease)
+        finally:
+            kv.release_paged(lease)
+        return [DecodeEvent(request_id=r.request_id, tokens=steps,
+                            seconds=0.0) for r in records]
+
+    return hook, calls
+
+
+def test_kv_slab_exhaustion_mid_decode_parks_and_rejoins(
+        small_store, small_index, rng):
+    """``acquire_paged`` failing at a round frontier is an admission
+    decision, not a hook crash: the runtime sheds the older half of the
+    wave (re-executed immediately at the smaller batch), parks the
+    younger half ``PRESSURE_STALLED``, and the parked members rejoin on
+    the page-free event the running half's ``release_paged`` fires —
+    every request completes, nothing raises out of ``run()``."""
+    eng = _engine(small_index, pool_pages=4096)
+    kv = KVCacheManager(get_arch("llama3-8b").reduced(), pool=eng.pool)
+    # room for exactly TWO max_len=32 block tables (4 pages each)
+    kv.init_paged(num_pages=8, page_size=8)
+    hook, calls = _paged_hook(kv)
+    runtime = RetrievalRuntime(eng, include_tail=True, on_generate=hook)
+    q = unit_queries(small_store, rng, 4)
+    traces = make_traces("hyde", 4, seed=5)
+    recs = [runtime.submit(q[i], traces[i]) for i in range(4)]
+    runtime.run()
+    assert all(r.state == RequestState.COMPLETE for r in recs)
+    # the 4-wave could never fit: it shed, and everything that actually
+    # decoded did so at a batch the slab can hold
+    assert calls[0] == 4
+    assert all(c <= 2 for c in calls[1:])
+    marks = [getattr(e, "label", "") for e in runtime.recorder.events
+             if getattr(e, "kind", "") == "request"]
+    assert "pressure_stall" in marks, "no member ever parked"
+    assert "pressure_resume" in marks, "parked members never rejoined"
+    # the parked members' rounds produced results like everyone else's
+    for r in recs:
+        assert r.result.doc_ids
+
+
+def test_kv_pool_shortfall_spills_cold_prefetch_and_retries(
+        small_store, small_index, rng):
+    """``PoolExhausted`` tagged with ``bytes_needed`` is a *pool-bytes*
+    shortfall eviction can cure (paged KV returns its bytes between
+    waves, so warm prefetch residency creeps into them): the runtime
+    spills cold unpinned residency toward the failed lease and retries
+    the decode hook once — same wave, no shed, no park."""
+    from repro.memory.pool import PoolExhausted
+
+    eng = _engine(small_index, pool_pages=4096)
+    calls = []
+    room_targets = []
+    orig_make_room = eng.cache.make_room
+
+    def spying_make_room(buffer, pages, protect=None):
+        room_targets.append(pages)
+        return orig_make_room(buffer, pages, protect=protect)
+
+    eng.cache.make_room = spying_make_room
+
+    def hook(records, gen_tokens, rnd):
+        calls.append([r.request_id for r in records])
+        if len(calls) == 1:
+            raise PoolExhausted("kv bytes",
+                                bytes_needed=3 * eng.pool.page_nbytes)
+        return [DecodeEvent(request_id=r.request_id, tokens=2,
+                            seconds=0.0) for r in records]
+
+    runtime = RetrievalRuntime(eng, include_tail=True, on_generate=hook)
+    q = unit_queries(small_store, rng, 2)
+    traces = make_traces("hyde", 2, seed=5)
+    recs = [runtime.submit(q[i], traces[i]) for i in range(2)]
+    runtime.run()
+    assert all(r.state == RequestState.COMPLETE for r in recs)
+    # one relief spill, sized at least the lease's pages, and the retry
+    # re-ran the SAME wave (no shed split)
+    assert len(room_targets) == 1 and room_targets[0] >= 3
+    assert calls[1] == calls[0]
+    marks = [getattr(e, "label", "") for e in runtime.recorder.events
+             if getattr(e, "kind", "") == "request"]
+    assert "pressure_stall" not in marks
+
+
+def test_kv_pool_shortfall_singleton_parks_until_pages_free(
+        small_store, small_index, rng):
+    """A singleton wave has no half to shed, but raising is only right
+    when NO future event could free pages.  Here another in-flight
+    wave's cluster pins are pending release at its completion, so the
+    stuck singleton parks ``PRESSURE_STALLED`` whole and rejoins on
+    that page-free event instead of raising out of ``run()``."""
+    from repro.memory.pool import PoolExhausted
+
+    eng = _engine(small_index, pool_pages=4096)
+    failures = []
+
+    def hook(records, gen_tokens, rnd):
+        rids = [r.request_id for r in records]
+        if rids == [1] and len(failures) < 2:
+            # first attempt + the relief retry both fail: nothing cold
+            # to spill (every resident cluster is pinned)
+            failures.append(tuple(rids))
+            raise PoolExhausted("kv bytes",
+                                bytes_needed=eng.pool.page_nbytes)
+        return [DecodeEvent(request_id=r.request_id, tokens=2,
+                            seconds=0.0) for r in records]
+
+    runtime = RetrievalRuntime(eng, micro_batch=1, include_tail=True,
+                               on_generate=hook)
+    q = unit_queries(small_store, rng, 2)
+    traces = make_traces("hyde", 2, seed=5)
+    recs = [runtime.submit(q[i], traces[i]) for i in range(2)]
+    runtime.run()
+    assert all(r.state == RequestState.COMPLETE for r in recs)
+    assert len(failures) == 2
+    marks = [getattr(e, "label", "") for e in runtime.recorder.events
+             if getattr(e, "kind", "") == "request"]
+    assert "pressure_stall" in marks, "the singleton never parked"
+    assert "pressure_resume" in marks, "the parked singleton never woke"
+    for r in recs:
+        assert r.result.doc_ids
+
+
+def test_kv_exhaustion_on_singleton_wave_still_raises(small_store,
+                                                      small_index, rng):
+    """With nothing left to shed (batch of one) slab exhaustion is real
+    exhaustion: the legacy raise-out behavior is preserved."""
+    from repro.memory.pool import PoolExhausted
+
+    eng = _engine(small_index, pool_pages=4096)
+    kv = KVCacheManager(get_arch("llama3-8b").reduced(), pool=eng.pool)
+    kv.init_paged(num_pages=2, page_size=8)     # one seq of 32 needs 4
+    hook, _calls = _paged_hook(kv)
+    runtime = RetrievalRuntime(eng, on_generate=hook)
+    runtime.submit(unit_queries(small_store, rng, 1)[0],
+                   make_traces("hyde", 1, seed=5)[0])
+    with pytest.raises(PoolExhausted):
+        runtime.run()
+
+
+def test_kv_exhaustion_in_never_reform_mode_still_raises(small_store,
+                                                         small_index, rng):
+    """Never-re-form cohorts cannot split, so the shed/park path must
+    not engage: the exception propagates exactly as before."""
+    from repro.memory.pool import PoolExhausted
+
+    eng = _engine(small_index, pool_pages=4096)
+    kv = KVCacheManager(get_arch("llama3-8b").reduced(), pool=eng.pool)
+    kv.init_paged(num_pages=8, page_size=8)     # two seqs; the wave is 4
+    hook, _calls = _paged_hook(kv)
+    runtime = RetrievalRuntime(eng, reform=False, on_generate=hook)
+    q = unit_queries(small_store, rng, 4)
+    traces = make_traces("hyde", 4, seed=5)
+    for i in range(4):
+        runtime.submit(q[i], traces[i])
+    with pytest.raises(PoolExhausted):
+        runtime.run()
