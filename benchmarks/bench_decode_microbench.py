@@ -56,7 +56,8 @@ from repro.models import transformer as tf
 from repro.obs import SystemClock
 from repro.serving import DecodeRunner, EngineConfig
 from repro.serving.kv_cache import KVCacheManager
-from benchmarks.common import BENCH_DIR, emit, summarize_rows, write_report
+from benchmarks.common import (emit, report_path, summarize_rows,
+                               write_report)
 
 SCHEMA = "telerag.decode_microbench/v1"
 
@@ -287,8 +288,10 @@ def run(*, B: int = 8, S: int = 1024, KVH: int = 8, G: int = 4,
         "kernels": records,
     }
     validate_report(report)
-    os.makedirs(BENCH_DIR, exist_ok=True)
-    path = out or os.path.join(BENCH_DIR, "decode_microbench.json")
+    # report-dir routed (untracked): regenerated timing JSON is a CI
+    # artifact, never a commit — the schema itself is pinned by
+    # tests/data/decode_microbench_pinned.json
+    path = out or report_path("decode_microbench.json")
     with open(path, "w") as f:
         json.dump(report, f, indent=1)
     # the uniform telerag.bench/v1 report alongside the detailed one

@@ -153,6 +153,15 @@ def set_report_dir(path: Optional[str]) -> None:
     _report_dir = path
 
 
+def report_path(filename: str) -> str:
+    """Resolve a bench output file against the active report dir
+    (``--report-dir``, else ``experiments/bench`` — untracked either
+    way: regenerated bench output is a CI artifact, not a commit)."""
+    out_dir = _report_dir or BENCH_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    return os.path.join(out_dir, filename)
+
+
 def validate_report(report: Dict) -> None:
     """Schema guard for a ``telerag.bench/v1`` report (asserted by the
     bench smokes and tests/test_obs.py so the emitted JSON stays

@@ -26,12 +26,12 @@ def main() -> None:
         args.quick = True
         if args.only is None:
             args.only = ("overlap,overlap_trace,sched,admission,openloop,"
-                         "tenants,continuous,decode_microbench")
+                         "tenants,continuous,decode_microbench,chunk_kv")
 
-    from benchmarks import (bench_breakdown, bench_budget, bench_continuous,
-                            bench_decode_microbench, bench_hitrate,
-                            bench_kernels, bench_latency, bench_nprobe,
-                            bench_openloop, bench_overlap,
+    from benchmarks import (bench_breakdown, bench_budget, bench_chunk_kv,
+                            bench_continuous, bench_decode_microbench,
+                            bench_hitrate, bench_kernels, bench_latency,
+                            bench_nprobe, bench_openloop, bench_overlap,
                             bench_overlap_trace, bench_sched, bench_scaling,
                             bench_tenants, bench_throughput)
     from benchmarks.common import set_report_dir
@@ -64,6 +64,9 @@ def main() -> None:
         "decode_microbench": lambda: (
             bench_decode_microbench.run_smoke() if args.quick
             else bench_decode_microbench.run()),
+        "chunk_kv": lambda: (
+            bench_chunk_kv.run_smoke() if args.quick
+            else bench_chunk_kv.run()),
         "openloop": lambda: bench_openloop.run(
             n_requests=16 if args.quick else 48),
         "tenants": lambda: bench_tenants.run(

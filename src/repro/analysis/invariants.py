@@ -57,6 +57,12 @@ KV_LEASE_REUSE = "kv_lease_reuse"
 KV_APPEND_OUT_OF_LEASE = "kv_append_out_of_lease"
 KV_APPEND_OVERFLOW = "kv_append_overflow"
 KV_PAGE_CONSERVATION = "kv_page_conservation"
+KV_SPLICE_OUT_OF_LEASE = "kv_splice_out_of_lease"
+KV_RECYCLE_MISMATCH = "kv_recycle_mismatch"
+CHUNK_PIN_BEFORE_LOAD = "chunk_pin_before_load"
+CHUNK_UNPIN_WITHOUT_PIN = "chunk_unpin_without_pin"
+CHUNK_EVICT_WHILE_PINNED = "chunk_evict_while_pinned"
+CHUNK_PAGE_CONSERVATION = "chunk_page_conservation"
 DECODE_WITHOUT_KV = "decode_without_kv"
 TRANSFER_INVERTED = "transfer_inverted"
 LIFECYCLE_DISORDER = "lifecycle_disorder"
@@ -311,6 +317,15 @@ def check_events(events: Iterable, *, drained: bool = False,
     # open leases carry their acquired page count + max_len capacity
     paged_open: Dict[Tuple[int, int], Dict[str, int]] = {}
     paged_done: set = set()
+    # dense bucket recycling, per replica: a dense kv.release parks the
+    # bucket (+1), a recycled kv.acquire reuses one (-1), kv.drop
+    # returns one's bytes to the pool (-1) — the balance never dips
+    # below zero, or recycling double-counted a bucket
+    recycle_pool: Dict[int, int] = {}
+    # chunk-KV residency discipline, keyed (replica, doc_id): load →
+    # pin*/unpin* (balanced, pins tracked) → evict at pin count zero
+    chunk_open: Dict[Tuple[int, int], Dict[str, int]] = {}
+    chunk_loads = 0
     for e in evs:
         kind = str(g(e, "kind", ""))
         if kind in ("pool.lease", "pool.release"):
@@ -349,6 +364,16 @@ def check_events(events: Iterable, *, drained: bool = False,
                 else:
                     paged_open[key] = {"pages": int(g(e, "pages", 0)),
                                        "max_len": int(g(e, "max_len", 0))}
+            elif g(e, "recycled", False):
+                bal = recycle_pool.get(r, 0)
+                if bal <= 0:
+                    v(InvariantViolation(
+                        KV_RECYCLE_MISMATCH, t=float(g(e, "t", 0.0)),
+                        replica=r,
+                        message="recycled kv.acquire with no bucket parked "
+                                "by a prior dense kv.release"))
+                else:
+                    recycle_pool[r] = bal - 1
         elif kind == "kv.append":
             r = int(g(e, "replica", -1))
             lid = int(g(e, "lease_id", -1))
@@ -366,6 +391,32 @@ def check_events(events: Iterable, *, drained: bool = False,
                     message=f"kv.append advanced lease {lid} to length "
                             f"{g(e, 'length')} past its max_len "
                             f"{st['max_len']} capacity"))
+        elif kind == "kv.splice":
+            r = int(g(e, "replica", -1))
+            lid = int(g(e, "lease_id", -1))
+            t = float(g(e, "t", 0.0))
+            st = paged_open.get((r, lid)) if lid >= 0 else None
+            if st is None:
+                v(InvariantViolation(
+                    KV_SPLICE_OUT_OF_LEASE, t=t, replica=r,
+                    message=f"kv.splice for lease {lid} outside its "
+                            f"acquire→release window — chunk pages attached "
+                            f"to a block table that is not live"))
+            else:
+                # the splice legitimately raises the lease's capacity
+                # (chunk pages prepend at page boundaries); later appends
+                # are bounded by the raised max_len
+                st["max_len"] = max(st["max_len"], int(g(e, "max_len", 0)))
+        elif kind == "kv.drop":
+            r = int(g(e, "replica", -1))
+            bal = recycle_pool.get(r, 0)
+            if bal <= 0:
+                v(InvariantViolation(
+                    KV_RECYCLE_MISMATCH, t=float(g(e, "t", 0.0)), replica=r,
+                    message="kv.drop with no bucket parked by a prior "
+                            "dense kv.release"))
+            else:
+                recycle_pool[r] = bal - 1
         elif kind == "kv.release":
             r = int(g(e, "replica", -1))
             kv_out[r] = kv_out.get(r, 0) - 1
@@ -375,6 +426,8 @@ def check_events(events: Iterable, *, drained: bool = False,
                     message="kv.release without a matching kv.acquire"))
                 kv_out[r] = 0
             lid = int(g(e, "lease_id", -1))
+            if lid < 0:
+                recycle_pool[r] = recycle_pool.get(r, 0) + 1
             if lid >= 0:
                 key = (r, lid)
                 st = paged_open.pop(key, None)
@@ -394,6 +447,60 @@ def check_events(events: Iterable, *, drained: bool = False,
                                     f"pages but acquired {st['pages']} — "
                                     f"block-table pages leaked or "
                                     f"double-counted"))
+        elif kind in ("chunk.load", "chunk.pin", "chunk.unpin",
+                      "chunk.evict"):
+            r = int(g(e, "replica", -1))
+            d = int(g(e, "doc_id", -1))
+            t = float(g(e, "t", 0.0))
+            key = (r, d)
+            st = chunk_open.get(key)
+            if kind == "chunk.load":
+                chunk_loads += 1
+                if st is not None:
+                    v(InvariantViolation(
+                        CHUNK_PAGE_CONSERVATION, t=t, replica=r,
+                        message=f"chunk {d} loaded twice without an "
+                                f"intervening evict — {st['pages']} resident "
+                                f"pages double-counted"))
+                chunk_open[key] = {"pages": int(g(e, "pages", 0)), "pins": 0}
+            elif kind == "chunk.pin":
+                if st is None:
+                    # the splice-before-land race: a block table is about
+                    # to reference pages that were never landed
+                    v(InvariantViolation(
+                        CHUNK_PIN_BEFORE_LOAD, t=t, replica=r,
+                        message=f"chunk {d} pinned before any chunk.load — "
+                                f"splice would reference pages not on "
+                                f"device"))
+                else:
+                    st["pins"] += 1
+            elif kind == "chunk.unpin":
+                if st is None or st["pins"] <= 0:
+                    v(InvariantViolation(
+                        CHUNK_UNPIN_WITHOUT_PIN, t=t, replica=r,
+                        message=f"chunk {d} unpinned with no outstanding "
+                                f"pin"))
+                else:
+                    st["pins"] -= 1
+            else:                                  # chunk.evict
+                if st is None:
+                    v(InvariantViolation(
+                        CHUNK_PAGE_CONSERVATION, t=t, replica=r,
+                        message=f"chunk {d} evicted but never loaded"))
+                else:
+                    if st["pins"] > 0:
+                        v(InvariantViolation(
+                            CHUNK_EVICT_WHILE_PINNED, t=t, replica=r,
+                            message=f"chunk {d} evicted while pinned "
+                                    f"({st['pins']} pins) — spilled pages "
+                                    f"out from under a live block table"))
+                    rel = int(g(e, "pages", 0))
+                    if rel != st["pages"]:
+                        v(InvariantViolation(
+                            CHUNK_PAGE_CONSERVATION, t=t, replica=r,
+                            message=f"chunk {d} evicted {rel} pages but "
+                                    f"loaded {st['pages']}"))
+                    del chunk_open[key]
         elif kind == "decode":
             r = int(g(e, "replica", -1))
             if r in kv_replicas and not kv_seen.get(r):
@@ -457,6 +564,12 @@ def check_events(events: Iterable, *, drained: bool = False,
                     HELD_AT_DRAIN, replica=r,
                     message=f"paged lease {lid} still open after drain "
                             f"({st['pages']} slab pages held)"))
+        if "chunk_kv" in must_drain:
+            for (r, d), st in sorted(chunk_open.items()):
+                v(InvariantViolation(
+                    HELD_AT_DRAIN, replica=r,
+                    message=f"chunk {d} still resident after drain "
+                            f"({st['pages']} pages, {st['pins']} pins)"))
 
     rep.outstanding = {f"r{r}:{o}": bal
                        for (r, o), bal in sorted(pages_out.items()) if bal}
@@ -467,6 +580,7 @@ def check_events(events: Iterable, *, drained: bool = False,
         "waves_dispatched": len(dispatch),
         "requests": len(first),
         "paged_leases": len(paged_done) + len(paged_open),
+        "chunk_loads": chunk_loads,
         "pool_edges": sum(1 for e in evs
                           if str(g(e, "kind", "")).startswith("pool.")),
     }

@@ -156,11 +156,22 @@ class _FuncLeaseAudit:
         self.protected_args: set = set()
         # acquire calls whose result is discarded outright
         self.discarded: List[Tuple[int, str, set]] = []
+        # target -> names its value was built from: ``res = R(lease=l)``
+        # transfers ownership of ``l`` wherever ``res`` escapes to
+        self.built_from: Dict[str, set] = {}
 
     def run(self) -> List[LintViolation]:
         body = getattr(self.func, "body", [])
         for stmt in body:
             self._scan_stmt(stmt, protected=False)
+        # transitive escape: a name wrapped into an escaping object
+        # (constructor arg, tuple member) escaped with it
+        todo = list(self.escaped)
+        while todo:
+            for src in self.built_from.get(todo.pop(), ()):
+                if src not in self.escaped:
+                    self.escaped.add(src)
+                    todo.append(src)
         out = [LintViolation(
             rule="TL001", path=self.path, line=line, symbol=self.symbol,
             detail=f"discard:{meth}",
@@ -253,9 +264,11 @@ class _FuncLeaseAudit:
                 if meth is not None:
                     self.acquired[tgt.id] = (tgt.lineno, meth)
                     self.acquire_args.setdefault(tgt.id, set()).update(args)
-                elif tgt.id in self.acquired:
-                    # rebound to something else: original audit stands
-                    pass
+                else:
+                    # rebound acquires keep their audit; the new binding
+                    # carries ownership of the names it was built from
+                    self.built_from.setdefault(tgt.id, set()).update(
+                        _names_in(value))
             elif isinstance(tgt, (ast.Attribute, ast.Subscript)):
                 # stored on an owner object/container: escapes
                 for name in _names_in(value):

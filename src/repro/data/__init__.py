@@ -1,3 +1,11 @@
+from repro.data.chunk_kv import (ChunkKV, ChunkKVStore, build_chunk,
+                                 build_chunk_kv, chunk_tokens,
+                                 cluster_map_from_assignments,
+                                 pages_from_cache)
 from repro.data.pipeline import DataConfig, TokenStream
 
-__all__ = ["DataConfig", "TokenStream"]
+__all__ = [
+    "ChunkKV", "ChunkKVStore", "DataConfig", "TokenStream", "build_chunk",
+    "build_chunk_kv", "chunk_tokens", "cluster_map_from_assignments",
+    "pages_from_cache",
+]

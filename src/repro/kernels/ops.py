@@ -195,3 +195,24 @@ def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                                               block_table, lengths, window)
     return _flash_paged_kernel(q, k_pages, v_pages, block_table, lengths,
                                window=window, interpret=_interpret(m))
+
+
+def flash_decode_spliced(q: jax.Array, k_pages: jax.Array,
+                         v_pages: jax.Array, block_table: jax.Array,
+                         lengths: jax.Array, page_delta: jax.Array,
+                         page_valid: jax.Array, *,
+                         rope_fraction: float = 1.0,
+                         rope_theta: float = 10_000.0,
+                         mode: str = DEFAULT_MODE) -> jax.Array:
+    """Paged decode attention over a block table mixing fresh pages with
+    spliced chunk-KV pages: per-page reordered-RoPE reindexing
+    (``page_delta`` [B,MB], the constant rotation offset per page) plus
+    per-page live-token masking (``page_valid`` [B,MB], < ps only on a
+    spliced chunk's partial last page).  A Pallas plane for the spliced
+    form does not exist yet, so every resolved mode runs the jnp oracle
+    — resolution still happens so invalid modes fail loudly and the
+    ``REPRO_KERNEL_MODE`` switch stays uniform across entry points."""
+    resolve_mode(mode)
+    return ref_mod.flash_decode_spliced_ref(
+        q, k_pages, v_pages, block_table, lengths, page_delta, page_valid,
+        rope_fraction=rope_fraction, rope_theta=rope_theta)

@@ -90,6 +90,52 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
 
 
+def flash_decode_spliced_ref(q: jax.Array, k_pages: jax.Array,
+                             v_pages: jax.Array, block_table: jax.Array,
+                             lengths: jax.Array, page_delta: jax.Array,
+                             page_valid: jax.Array, *,
+                             rope_fraction: float = 1.0,
+                             rope_theta: float = 10_000.0) -> jax.Array:
+    """Paged decode-attention oracle over a block table that mixes fresh
+    pages with **spliced** chunk-KV pages (reordered RoPE, TurboRAG).
+
+    Spliced pages hold K rotated at chunk-local positions; RoPE rotations
+    compose (``R(p + d) = R(d) @ R(p)``), so rotating a page's stored K
+    by its constant layout offset ``page_delta[b, blk]`` reindexes it to
+    the wave's global positions.  ``page_valid[b, blk]`` is the number of
+    live tokens on the page (< ps only for a spliced chunk's partial last
+    page); the dead tail slots are masked out of the softmax.  Fresh
+    pages carry ``delta = 0`` and ``valid = ps``.
+
+    q [B, KVH, G, Dh]; k_pages, v_pages [NP, ps, KVH, Dh]; block_table /
+    page_delta / page_valid [B, MB] int32; lengths [B] int32 (the new
+    token sits at layout position ``lengths - 1``).  Returns
+    [B, KVH, G, Dh] fp32.
+    """
+    from repro.models.layers import apply_rope
+
+    B, MB = block_table.shape
+    NP, ps, KVH, Dh = k_pages.shape
+    bt = jnp.maximum(block_table, 0)
+    k = k_pages[bt]                                    # [B, MB, ps, KVH, Dh]
+    v = v_pages[bt]
+    k = apply_rope(k, jnp.broadcast_to(page_delta[:, :, None], (B, MB, ps)),
+                   fraction=rope_fraction, theta=rope_theta)
+    k = k.reshape(B, MB * ps, KVH, Dh)
+    v = v.reshape(B, MB * ps, KVH, Dh)
+
+    scale = 1.0 / math.sqrt(Dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    kp = jnp.arange(MB * ps, dtype=jnp.int32)          # layout positions
+    live = kp[None, :] % ps < jnp.repeat(page_valid, ps, axis=1)   # [B, N]
+    causal = kp[None, :] <= (lengths - 1)[:, None]
+    mask = (live & causal)[:, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+
+
 def flash_decode_paged_ref(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, block_table: jax.Array,
                            lengths: jax.Array, window: int = 0) -> jax.Array:

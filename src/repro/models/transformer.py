@@ -885,3 +885,84 @@ def serve_step_paged(params: Params, k_slab: jax.Array, v_slab: jax.Array,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed(params, x[:, 0, :], cfg)
     return logits, k_slab, v_slab
+
+
+def serve_step_paged_spliced(params: Params, k_slab: jax.Array,
+                             v_slab: jax.Array, block_table: jax.Array,
+                             lengths: jax.Array, page_delta: jax.Array,
+                             page_valid: jax.Array,
+                             inputs: Dict[str, jax.Array], cfg: ArchConfig, *,
+                             kernel_mode: Optional[str] = None,
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``serve_step_paged`` over a block table that mixes fresh pages
+    with **spliced** chunk-KV pages (reordered RoPE per TurboRAG).
+
+    Spliced pages hold K/V prefillled offline at chunk-local positions
+    0..C-1 and attach by block-table edit; at attention time each page's
+    stored K is rotated by its constant layout offset ``page_delta[b,
+    blk]`` (chunks splice at page boundaries, so the offset is uniform
+    across a page) and the dead tail of a chunk's partial last page is
+    masked via ``page_valid[b, blk]`` live-token counts.  Fresh pages
+    carry ``delta = 0`` and ``valid = ps`` — with an all-fresh table this
+    is numerically ``serve_step_paged``.  The new token is roped and
+    scattered at layout position ``lengths`` exactly as in the unspliced
+    form.  Same plain global-causal GQA restriction.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    if (family_kind(cfg) != "attn" or cfg.attn_kind != "gqa"
+            or cfg.local_global_pattern or cfg.sliding_window):
+        raise ValueError(
+            "serve_step_paged_spliced supports plain global-causal GQA archs "
+            f"only (family {family_kind(cfg)!r}, attn_kind {cfg.attn_kind!r})")
+    mode = kernel_ops.DEFAULT_MODE if kernel_mode is None else kernel_mode
+
+    tok = inputs["token"]
+    x = embed_tokens(params, tok[:, None], cfg)
+    B = x.shape[0]
+    L = cfg.num_layers
+    H, KVH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ps = k_slab.shape[2]
+    positions = lengths[:, None]                       # new token's position
+    slot = jnp.take_along_axis(block_table,
+                               (lengths // ps)[:, None], axis=1)[:, 0]
+    off = lengths % ps
+
+    def body(carry, xs):
+        h, ks, vs = carry
+        lp, li = xs
+        ap = lp["attn"]
+        a_in = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", a_in, ap["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", a_in, ap["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", a_in, ap["wv"])
+        q = apply_rope(q, positions, fraction=cfg.rope_fraction,
+                       theta=cfg.rope_theta)
+        k = apply_rope(k, positions, fraction=cfg.rope_fraction,
+                       theta=cfg.rope_theta)
+        kl = jax.lax.dynamic_index_in_dim(ks, li, keepdims=False)
+        vl = jax.lax.dynamic_index_in_dim(vs, li, keepdims=False)
+        kl = kl.at[slot, off].set(k[:, 0].astype(kl.dtype))
+        vl = vl.at[slot, off].set(v[:, 0].astype(vl.dtype))
+        ks = jax.lax.dynamic_update_index_in_dim(ks, kl, li, 0)
+        vs = jax.lax.dynamic_update_index_in_dim(vs, vl, li, 0)
+        out = kernel_ops.flash_decode_spliced(
+            q[:, 0].reshape(B, KVH, H // KVH, Dh), kl, vl,
+            block_table, lengths + 1, page_delta, page_valid,
+            rope_fraction=cfg.rope_fraction, rope_theta=cfg.rope_theta,
+            mode=mode)
+        out = out.reshape(B, 1, H, Dh).astype(h.dtype)
+        h = h + jnp.einsum("bshk,hkd->bsd", out, ap["wo"])
+        m_in = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.moe is not None:
+            m_out, _ = moe_mod.moe_forward(lp["mlp"], m_in, cfg)
+        else:
+            m_out = mlp_forward(lp["mlp"], m_in, cfg.mlp_act, cfg.mlp_gated)
+        return (h + m_out, ks, vs), None
+
+    (x, k_slab, v_slab), _ = jax.lax.scan(
+        body, (x, k_slab, v_slab),
+        (params["layers"], jnp.arange(L, dtype=jnp.int32)))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x[:, 0, :], cfg)
+    return logits, k_slab, v_slab

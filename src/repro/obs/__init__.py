@@ -17,15 +17,16 @@ from repro.obs.clock import SYSTEM_CLOCK, EventClock, SystemClock
 from repro.obs.export import to_jsonl, to_perfetto, write_jsonl, write_trace
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                TimeSeries)
-from repro.obs.recorder import (LEGACY_LABELS, AdmissionEvent, CounterSample,
-                                DecodeStep, FlightRecorder, KVEvent,
-                                PoolEvent, RequestEvent, SpanEvent,
+from repro.obs.recorder import (LEGACY_LABELS, AdmissionEvent, ChunkKVEvent,
+                                CounterSample, DecodeStep, FlightRecorder,
+                                KVEvent, PoolEvent, RequestEvent, SpanEvent,
                                 TraceEvent, TransferRecord, WaveEvent)
 from repro.obs.render import (render_replica_line, render_telemetry,
                               render_tenant_line)
 
 __all__ = [
-    "AdmissionEvent", "analyze", "Counter", "CounterSample", "DecodeStep",
+    "AdmissionEvent", "analyze", "ChunkKVEvent", "Counter", "CounterSample",
+    "DecodeStep",
     "EventClock", "SYSTEM_CLOCK", "SystemClock",
     "FlightRecorder", "Gauge", "Histogram", "KVEvent", "LEGACY_LABELS",
     "MetricsRegistry", "OverlapReport", "OverlapRound", "PoolEvent",

@@ -138,14 +138,22 @@ class PoolEvent(TraceEvent):
 @dataclass(frozen=True)
 class KVEvent(TraceEvent):
     """One decode-cache lease edge (``kv.acquire`` / ``kv.append`` /
-    ``kv.release``): the KV manager's view on top of the pool's byte
-    accounting.  Dense bucket leases emit acquire/release with
-    ``lease_id=-1``; paged (block-table) leases additionally carry a
-    globally unique ``lease_id``, their slab page count (``pages``) and
-    — on every ``kv.append`` — the post-append max sequence ``length``,
-    which is what the invariant checker conserves (page conservation
-    per lease, append-within-lease ordering, no append past
-    ``max_len``)."""
+    ``kv.splice`` / ``kv.release`` / ``kv.drop``): the KV manager's view
+    on top of the pool's byte accounting.  Dense bucket leases emit
+    acquire/release with ``lease_id=-1`` (``recycled=True`` when the
+    acquire reused a released bucket instead of allocating, and
+    ``kv.drop`` when a recycled bucket's bytes finally return to the
+    pool — together these keep the checker's kv accounting
+    conservation-exact across bucket recycling); paged (block-table)
+    leases additionally carry a globally unique ``lease_id``, their slab
+    page count (``pages``) and — on every ``kv.append`` — the
+    post-append max sequence ``length``, which is what the invariant
+    checker conserves (page conservation per lease,
+    append-within-lease ordering, no append past ``max_len``).
+    ``kv.splice`` marks precomputed chunk-KV pages attached to an open
+    paged lease by block-table edit: ``pages`` spliced page slots,
+    ``length`` the post-splice max length, ``max_len`` the lease's
+    raised capacity."""
 
     batch: int = 0
     max_len: int = 0
@@ -153,6 +161,26 @@ class KVEvent(TraceEvent):
     lease_id: int = -1                # paged leases only; -1 = dense bucket
     pages: int = 0                    # slab page slots held by the lease
     length: int = 0                   # kv.append: max lengths after the write
+    recycled: bool = False            # dense acquire reused a released bucket
+
+
+@dataclass(frozen=True)
+class ChunkKVEvent(TraceEvent):
+    """One chunk-KV residency edge (``chunk.load`` / ``chunk.pin`` /
+    ``chunk.unpin`` / ``chunk.evict``): the lifecycle of one document's
+    precomputed KV pages on device.  ``chunk.load`` lands ``pages``
+    slab pages H2D (charged to the pool as owner ``"chunk_kv"``);
+    ``chunk.pin``/``chunk.unpin`` bracket a wave's splice (``pinned``
+    is the post-op pin count — pinned residency is protected from
+    spill); ``chunk.evict`` returns the pages (legal only at
+    ``pinned == 0``).  The invariant checker conserves pages per
+    (replica, doc) and rejects pin-before-load (the splice-before-land
+    race) and evict-while-pinned."""
+
+    doc_id: int = -1
+    pages: int = 0
+    nbytes: int = 0
+    pinned: int = 0                   # pin count after this event
 
 
 @dataclass(frozen=True)

@@ -4,6 +4,8 @@ from repro.serving.api import (RagRequest, RagResponse, ReplicaTelemetry,
                                summarize_latency)
 from repro.serving.engine import (EngineConfig, RequestResult, RoundTelemetry,
                                   TeleRAGEngine)
+from repro.serving.chunk_kv import (ChunkKVCache, ChunkKVStats,
+                                    ChunkResidency)
 from repro.serving.decode import DecodeRunner, supports_paged_decode
 from repro.serving.kv_cache import (CacheLease, KVCacheManager, KVPageSlab,
                                     PagedCacheLease)
@@ -23,6 +25,7 @@ __all__ = [
     "RagRequest", "RagResponse", "ReplicaTelemetry", "ServerTelemetry",
     "TeleRAGServer", "TenantTelemetry", "WaveDispatch", "summarize_latency",
     "EngineConfig", "RequestResult", "RoundTelemetry", "TeleRAGEngine",
+    "ChunkKVCache", "ChunkKVStats", "ChunkResidency",
     "DecodeRunner", "supports_paged_decode",
     "CacheLease", "KVCacheManager", "KVPageSlab", "PagedCacheLease",
     "GlobalBatchReport", "MultiReplicaOrchestrator", "PipelineExecutor",

@@ -55,7 +55,7 @@ serving").
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, replace as dc_replace
+from dataclasses import dataclass, field, replace as dc_replace
 from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple)
 
 import numpy as np
@@ -207,11 +207,16 @@ class ReplicaTelemetry:
     admission: AdmissionStats
     transfers: int
     transfer_queued_s: float
+    # chunk-KV effectiveness (empty dict when splicing is not enabled):
+    # hit_rate, spliced_pages, prefill_tokens_avoided, prefetched_pages,
+    # resident_pages, pinned_pages — see docs/TELEMETRY.md
+    chunk_kv: Dict[str, float] = field(default_factory=dict)
 
     @classmethod
     def capture(cls, i: int, eng: TeleRAGEngine) -> "ReplicaTelemetry":
         """Snapshot replica ``i``'s engine counters (admission stats are
         copied, so the snapshot does not alias live state)."""
+        chunk = getattr(eng, "chunk_kv", None)
         return cls(
             replica=i,
             bytes_h2d=eng.buffer.stats.bytes_h2d,
@@ -222,7 +227,11 @@ class ReplicaTelemetry:
             occupancy=eng.ledger.occupancy(),
             admission=dc_replace(eng.admission.stats),
             transfers=len(eng.transfer.events),
-            transfer_queued_s=sum(e.queued_s for e in eng.transfer.events))
+            transfer_queued_s=sum(e.queued_s for e in eng.transfer.events),
+            chunk_kv=({} if chunk is None else dict(
+                chunk.stats.as_dict(),
+                resident_pages=chunk.resident_pages(),
+                pinned_pages=chunk.pinned_pages())))
 
 
 @dataclass(frozen=True)
@@ -247,6 +256,8 @@ class TenantTelemetry:
     missed_in_queue: int             # deadline passed before admit_t
     demoted_rounds: int              # prefetches demoted as already-missed
     kv_bytes: int = 0                # live KV-lease bytes across replicas
+    chunk_kv_bytes: int = 0          # resident chunk-KV bytes attributed to
+                                     # this tenant's loads across replicas
 
     @property
     def missed_in_service(self) -> int:
@@ -402,7 +413,8 @@ class _TenantAcc:
             self._missed.inc(int(r.deadline_missed))
             self._missed_in_queue.inc(int(r.deadline_missed_in_queue))
 
-    def snapshot(self, tenant: str, kv_bytes: int = 0) -> TenantTelemetry:
+    def snapshot(self, tenant: str, kv_bytes: int = 0,
+                 chunk_kv_bytes: int = 0) -> TenantTelemetry:
         return TenantTelemetry(
             tenant=tenant, completed=self.completed,
             p50_latency_s=self._lat.percentile(50),
@@ -413,7 +425,7 @@ class _TenantAcc:
             deadline_missed=int(self._missed.value),
             missed_in_queue=int(self._missed_in_queue.value),
             demoted_rounds=int(self._demoted.value),
-            kv_bytes=int(kv_bytes))
+            kv_bytes=int(kv_bytes), chunk_kv_bytes=int(chunk_kv_bytes))
 
 
 class TeleRAGServer:
@@ -620,7 +632,10 @@ class TeleRAGServer:
             tenants=tuple(
                 acc.snapshot(t, kv_bytes=sum(
                     e.pool.tenant_bytes(t, owner="kv")
-                    for e in self.engines))
+                    for e in self.engines),
+                    chunk_kv_bytes=sum(
+                        e.pool.tenant_bytes(t, owner="chunk_kv")
+                        for e in self.engines))
                 for t, acc in sorted(self._tenant_acc.items())))
 
     # ---- internals ---------------------------------------------------------

@@ -38,7 +38,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.data.chunk_kv import ChunkKVStore
 from repro.models import transformer as tf
+from repro.serving.chunk_kv import ChunkKVCache
 from repro.serving.kv_cache import KVCacheManager
 from repro.serving.runtime import DecodeEvent
 from repro.serving.sampler import sample
@@ -67,12 +69,17 @@ class DecodeRunner:
     def __init__(self, params, cfg: ArchConfig, *, max_len: int = 128,
                  max_steps: int = 32, page_size: int = 16,
                  slab_seqs: int = 16,
-                 paged: Optional[bool] = None):
+                 paged: Optional[bool] = None,
+                 chunk_store: Optional[ChunkKVStore] = None):
         """``paged=None`` defers to ``EngineConfig.paged_decode`` at
         ``attach`` time (ANDed with arch support); an explicit bool
         overrides the engine config.  ``slab_seqs`` sizes the paged KV
         slab: page slots for that many concurrent ``max_len``
-        sequences."""
+        sequences.  ``chunk_store`` is the offline-built chunk-KV corpus
+        (``data.chunk_kv.build_chunk_kv``): when given (and the engine
+        enables ``chunk_kv``), each wave's previous-round retrieved docs
+        are spliced into its paged lease from precomputed pages instead
+        of being re-prefilled."""
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
@@ -81,15 +88,19 @@ class DecodeRunner:
         self.slab_seqs = slab_seqs
         self._paged_override = paged
         self.paged = bool(paged) and supports_paged_decode(cfg)
+        self.chunk_store = chunk_store
         self.clock = None                      # attach() adopts server.wall
         self._kv: Dict[int, KVCacheManager] = {}
+        self._chunk: Dict[int, ChunkKVCache] = {}
         self._dense_step = None
         self._paged_step = None
+        self._spliced_step = None
         # per-request generated tokens, per round: the differential
         # parity suite pins these exactly equal across paged/dense runs
         self.generated: Dict[int, List[Tuple[int, ...]]] = {}
         self.stats = {"paged_waves": 0, "dense_waves": 0,
-                      "paged_appends": 0, "dense_steps": 0}
+                      "paged_appends": 0, "dense_steps": 0,
+                      "spliced_waves": 0}
 
     # -- wiring --------------------------------------------------------------
     def attach(self, server) -> "DecodeRunner":
@@ -102,6 +113,9 @@ class DecodeRunner:
                 else self._paged_override)
         self.paged = bool(want) and supports_paged_decode(self.cfg)
         self._kernel_mode = eng0.cfg.kernel_mode
+        want_chunk = (self.paged and eng0.cfg.chunk_kv
+                      and self.chunk_store is not None)
+        self.chunk_docs = eng0.cfg.chunk_kv_docs
         for r, eng in enumerate(server.engines):
             kv = KVCacheManager(self.cfg, pool=eng.pool)
             if self.paged:
@@ -109,6 +123,12 @@ class DecodeRunner:
                 kv.init_paged(num_pages=self.slab_seqs * blocks,
                               page_size=self.page_size)
             self._kv[r] = kv
+            if want_chunk:
+                cache = ChunkKVCache(kv, self.chunk_store)
+                self._chunk[r] = cache
+                # the engine's spill chain and the policy's lookahead
+                # prefetch reach chunk residency through this attr
+                eng.chunk_kv = cache
         if self.paged:
             cfg, mode = self.cfg, self._kernel_mode
             self._paged_step = jax.jit(
@@ -116,6 +136,13 @@ class DecodeRunner:
                     p, k, v, bt, lens, {"token": tok}, cfg,
                     kernel_mode=mode),
                 donate_argnums=(1, 2))
+            if want_chunk:
+                self._spliced_step = jax.jit(
+                    lambda p, k, v, bt, lens, dl, vd, tok:
+                        tf.serve_step_paged_spliced(
+                            p, k, v, bt, lens, dl, vd, {"token": tok}, cfg,
+                            kernel_mode=mode),
+                    donate_argnums=(1, 2))
         else:
             cfg = self.cfg
             self._dense_step = jax.jit(
@@ -125,6 +152,11 @@ class DecodeRunner:
     def kv(self, replica: int = 0) -> KVCacheManager:
         """The replica's KV manager (attach() must have run)."""
         return self._kv[replica]
+
+    def chunk(self, replica: int = 0) -> Optional[ChunkKVCache]:
+        """The replica's chunk-KV residency cache (None when chunk-KV
+        splicing is not enabled on this runner)."""
+        return self._chunk.get(replica)
 
     # -- the hook ------------------------------------------------------------
     def __call__(self, replica: int, records, gen_tokens, rnd: int,
@@ -139,7 +171,18 @@ class DecodeRunner:
         kv = self._kv[replica]
         tenant = records[0].tenant
         if self.paged:
-            toks, per_step = self._run_paged(kv, n, steps, tenant)
+            row_docs = None
+            chunk = self._chunk.get(replica)
+            if chunk is not None:
+                # each row's context = the docs its previous retrieval
+                # round returned: splice their precomputed KV instead of
+                # re-prefilling them (round 0 has nothing retrieved yet)
+                row_docs = [
+                    [int(d) for d in r.result.doc_ids[-1]][:self.chunk_docs]
+                    if r.result.doc_ids else []
+                    for r in records]
+            toks, per_step = self._run_paged(kv, n, steps, tenant,
+                                             chunk=chunk, row_docs=row_docs)
         else:
             toks, per_step = self._run_dense(kv, n, steps, tenant)
         for j, r in enumerate(records):
@@ -151,20 +194,40 @@ class DecodeRunner:
                 for r, g in zip(records, gen_tokens)]
 
     def _run_paged(self, kv: KVCacheManager, n: int, steps: int,
-                   tenant: str):
+                   tenant: str, *, chunk: Optional[ChunkKVCache] = None,
+                   row_docs: Optional[List[List[int]]] = None):
         """Block-table decode: acquire_paged -> (serve_step_paged +
         append_paged) per step -> release_paged.  ``PoolExhausted``
-        from the acquire propagates to the runtime's shed/park path."""
+        from the acquire propagates to the runtime's shed/park path.
+
+        With a chunk cache and per-row doc ids, retrieved documents'
+        precomputed KV pages are pinned and spliced into the fresh
+        lease by block-table edit before the first step; the wave then
+        decodes through ``serve_step_paged_spliced`` (reordered RoPE +
+        partial-page masking).  Pins release back to warm residency in
+        the same ``finally`` that frees the lease."""
         self.stats["paged_waves"] += 1
         lease = kv.acquire_paged(n, self.max_len, tenant=tenant)
+        pinned: List[int] = []
         toks: List[jax.Array] = []
         try:
+            if chunk is not None and row_docs and any(row_docs):
+                row_chunks, pinned, _ = chunk.acquire_rows(row_docs,
+                                                           tenant=tenant)
+                if kv.splice_paged(lease, row_chunks):
+                    self.stats["spliced_waves"] += 1
             tok = jnp.zeros((n,), jnp.int32)
             t0 = self.clock.perf()
             for _ in range(steps):
-                bt, lens = lease.device_tables()
-                logits, kv.slab.k, kv.slab.v = self._paged_step(
-                    self.params, kv.slab.k, kv.slab.v, bt, lens, tok)
+                if lease.spliced_pages:
+                    bt, lens, dl, vd = lease.device_splice_tables()
+                    logits, kv.slab.k, kv.slab.v = self._spliced_step(
+                        self.params, kv.slab.k, kv.slab.v, bt, lens, dl, vd,
+                        tok)
+                else:
+                    bt, lens = lease.device_tables()
+                    logits, kv.slab.k, kv.slab.v = self._paged_step(
+                        self.params, kv.slab.k, kv.slab.v, bt, lens, tok)
                 kv.append_paged(lease)      # scatter was fused in-jit
                 self.stats["paged_appends"] += 1
                 tok = sample(logits)
@@ -175,8 +238,11 @@ class DecodeRunner:
         finally:
             # a raising decode step must still free the block table —
             # leaked paged leases shrink the slab AND the shared pool
-            # until admission starves (telint TL001)
+            # until admission starves (telint TL001); spliced chunks
+            # unpin AFTER the table is gone (back to warm residency)
             kv.release_paged(lease)
+            if chunk is not None:
+                chunk.release_rows(pinned)
         return toks, per_step
 
     def _run_dense(self, kv: KVCacheManager, n: int, steps: int,

@@ -66,6 +66,14 @@ class EngineConfig:
     paged_decode: bool = True                     # serve decode over block-
                                                   # table KV (False pins the
                                                   # legacy dense [B,S] path)
+    chunk_kv: bool = False                        # splice precomputed chunk-KV
+                                                  # pages into paged decode
+                                                  # (needs a ChunkKVStore on
+                                                  # the DecodeRunner)
+    chunk_kv_docs: int = 4                        # max docs spliced per row
+    chunk_kv_prefetch_pages: int = 16             # lookahead chunk-page burst
+                                                  # per round (0 = no chunk
+                                                  # prefetch)
     hw: HardwareProfile = TPU_V5E
     chips: int = 1
     t_cc: Optional[float] = None                  # None => bytes/host_mem_bw
@@ -197,8 +205,23 @@ class TeleRAGEngine:
             self.pool.set_tenant_share(tenant, floor, cap)
         self.admission = AdmissionController(
             self.pool,
-            spill=lambda target, protect=None: self.cache.make_room(
-                self.buffer, target, protect=protect))
+            spill=lambda target, protect=None: self._spill(target, protect))
+        # chunk-KV residency (set by DecodeRunner.attach when enabled);
+        # a memory rebuild (restart) loses on-device chunk pages, so the
+        # stale cache must not survive it — the hook re-attaches
+        self.chunk_kv = None
+
+    def _spill(self, target: int, protect=None) -> List[int]:
+        """Admission's page-reclaim chain: evict unpinned prefetch
+        residency first (existing slack rules), then cold chunk-KV
+        residency — pinned chunks, like in-flight wave pins, are
+        protected (evicting them would orphan live block tables).
+        ``target`` is a free-page goal; the controller measures what
+        actually freed, so the return (evicted clusters) is advisory."""
+        evicted = self.cache.make_room(self.buffer, target, protect=protect)
+        if self.chunk_kv is not None and self.pool.free_pages() < target:
+            self.chunk_kv.evict_cold(target - self.pool.free_pages())
+        return evicted
 
     @property
     def policy(self) -> RetrievalPolicy:

@@ -82,18 +82,22 @@ class KVCacheManager:
 
     def _record(self, kind: str, batch: int, max_len: int, nbytes: int,
                 tenant: str, *, lease_id: int = -1, pages: int = 0,
-                length: int = 0) -> None:
+                length: int = 0, recycled: bool = False) -> None:
         """Trace through the pool's recorder lane (the manager has no
         lane of its own — KV state belongs to the pool's replica).
         Paged lease edges carry ``lease_id``/``pages`` (and appends the
         post-write ``length``) so the invariant checker can conserve
-        pages per lease and pin the acquire→append→release order."""
+        pages per lease and pin the acquire→append→release order;
+        dense edges carry ``recycled`` (acquire reused a released
+        bucket) and ``kv.drop`` (a recycled bucket's bytes returned to
+        the pool) so bucket recycling stays conservation-exact too."""
         rec = self.pool.recorder if self.pool is not None else None
         if rec is not None:
             rec.emit(KVEvent(t=rec.now, kind=kind,
                              replica=self.pool.replica_id, tenant=tenant,
                              batch=batch, max_len=max_len, nbytes=nbytes,
-                             lease_id=lease_id, pages=pages, length=length))
+                             lease_id=lease_id, pages=pages, length=length,
+                             recycled=recycled))
 
     def acquire(self, batch: int, max_len: int, *, fresh: bool = False,
                 tenant: str = "shared") -> CacheLease:
@@ -108,6 +112,7 @@ class KVCacheManager:
         key = (batch, max_len)
         nbytes = self.nbytes(batch, max_len)
         cache, page_lease = self._pool_buckets.pop(key, (None, None))
+        recycled = cache is not None
         if cache is None:
             if self.pool is not None:
                 page_lease = self.pool.lease_bytes(nbytes, "kv", tag=key,
@@ -143,29 +148,49 @@ class KVCacheManager:
                 # attention caches are masked by pos so zeroing is
                 # optional
                 cache = jax.tree.map(lambda a: jnp.zeros_like(a), cache)
-        self._record("kv.acquire", batch, max_len, nbytes, tenant)
+        self._record("kv.acquire", batch, max_len, nbytes, tenant,
+                     recycled=recycled)
         return CacheLease(cache=cache, batch=batch, max_len=max_len,
                           nbytes=nbytes, page_lease=page_lease,
                           tenant=tenant)
 
     def release(self, lease: CacheLease) -> None:
         """Return the bucket for recycling (its pool lease stays live:
-        the bytes remain resident until ``drop``/``drop_all``)."""
+        the bytes remain resident until ``drop``/``drop_all``).  When a
+        same-shaped bucket is already parked, keeping both would leak
+        one pool lease forever — the incoming bucket's bytes go straight
+        back to the pool instead (release + immediate drop in the
+        trace, so the recycle balance stays conservation-exact)."""
         self._record("kv.release", lease.batch, lease.max_len,
                      lease.nbytes, lease.tenant)
-        self._pool_buckets[(lease.batch, lease.max_len)] = (lease.cache,
-                                                            lease.page_lease)
+        key = (lease.batch, lease.max_len)
+        if key in self._pool_buckets:
+            freed = lease.nbytes
+            if lease.page_lease is not None and self.pool is not None:
+                freed = lease.page_lease.nbytes
+                self.pool.release(lease.page_lease)
+            self._record("kv.drop", lease.batch, lease.max_len, freed,
+                         lease.tenant)
+            return
+        self._pool_buckets[key] = (lease.cache, lease.page_lease)
 
     def drop(self, batch: int, max_len: int) -> int:
-        """Free one recycled bucket back to the pool; returns its bytes."""
+        """Free one recycled bucket back to the pool; returns its bytes.
+        Emits ``kv.drop`` so the recycle pool's byte balance stays
+        conservation-exact in the trace (a dense ``kv.release`` parks
+        the bytes for reuse — only the drop actually returns them)."""
         cache, page_lease = self._pool_buckets.pop((batch, max_len),
                                                    (None, None))
         if cache is None:
             return 0
+        freed = self.nbytes(batch, max_len)
+        tenant = "shared"
         if page_lease is not None and self.pool is not None:
+            tenant = page_lease.tenant
+            freed = page_lease.nbytes
             self.pool.release(page_lease)
-            return page_lease.nbytes
-        return self.nbytes(batch, max_len)
+        self._record("kv.drop", batch, max_len, freed, tenant)
+        return freed
 
     def drop_all(self) -> int:
         """Free every recycled bucket (replica teardown / pressure spill)."""
@@ -256,7 +281,7 @@ class KVCacheManager:
                                lengths=np.zeros(batch, np.int32),
                                batch=batch, max_len=max_len, nbytes=nbytes,
                                page_lease=page_lease, tenant=tenant,
-                               lease_id=lease_id)
+                               lease_id=lease_id, owned_slots=tuple(slots))
 
     def append_paged(self, lease: "PagedCacheLease",
                      k_new: Optional[jax.Array] = None,
@@ -287,14 +312,97 @@ class KVCacheManager:
                      pages=lease.block_table.size,
                      length=int(lease.lengths.max(initial=0)))
 
-    def release_paged(self, lease: "PagedCacheLease") -> int:
-        """Return the lease's slab pages to the free list and release
-        its pool bytes; returns bytes freed.  Paged leases are per
-        request batch — no recycling bucket (block tables are cheap to
-        rebuild; the slab itself stays allocated)."""
+    def splice_paged(self, lease: "PagedCacheLease",
+                     row_chunks: List[List[Tuple[Tuple[int, ...], int]]],
+                     ) -> int:
+        """Attach precomputed chunk-KV pages to a fresh paged lease by
+        **block-table edit** (TurboRAG-style reuse; no copy).
+
+        ``row_chunks[i]`` lists row ``i``'s chunks as ``(slots,
+        length)`` pairs — slab page slots already holding the chunk's
+        K/V (written by ``ChunkKVCache.load``) and the chunk's token
+        count.  Chunks splice at page boundaries, in order, AHEAD of the
+        lease's own (fresh) pages: row ``i``'s table becomes ``[chunk
+        pages..., fresh pages..., -1 padding]``, its length starts at
+        the end of its spliced region (generation resumes at the next
+        page boundary), and the lease's ``max_len`` grows by the widest
+        spliced region so the append bounds check keeps holding.
+
+        Per-page splice metadata for the reordered-RoPE attention
+        (``serve_step_paged_spliced``) is materialized on the lease:
+        ``page_delta[i, blk]`` — the RoPE rotation offset (the chunk's
+        base layout position; stored K is roped chunk-locally, and
+        rotations compose) — and ``page_valid[i, blk]`` — live tokens
+        on the page (< page_size only on a chunk's partial last page;
+        the dead tail is masked, and generation's own pages stay fully
+        valid).
+
+        The spliced slots are NOT added to ``owned_slots``: the lease
+        only references them; ownership (and the pool's ``chunk_kv``
+        byte charge) stays with the chunk residency, which the caller
+        pins for the lease's lifetime.  Emits ``kv.splice`` (pages =
+        spliced page count, length = post-splice max length) inside the
+        lease's acquire→release window.  Returns the spliced page
+        count (0 = nothing to splice; the lease is untouched)."""
         slab = self._require_slab()
-        slab.free.extend(int(s) for s in lease.block_table.reshape(-1))
-        pages = lease.block_table.size
+        ps = slab.page_size
+        if len(row_chunks) != lease.batch:
+            raise ValueError(f"row_chunks has {len(row_chunks)} rows for a "
+                             f"batch-{lease.batch} lease")
+        if int(lease.lengths.max(initial=0)) > 0:
+            raise ValueError("splice_paged must run on a fresh lease "
+                             "(before any append)")
+        n_blocks = [sum(len(slots) for slots, _ in row) for row in row_chunks]
+        total = sum(n_blocks)
+        if total == 0:
+            return 0
+        lead = max(n_blocks)
+        B, MB = lease.block_table.shape
+        bt = np.full((B, lead + MB), -1, np.int32)
+        delta = np.zeros((B, lead + MB), np.int32)
+        valid = np.full((B, lead + MB), ps, np.int32)
+        for i, row in enumerate(row_chunks):
+            b0 = 0
+            for slots, length in row:
+                npg = len(slots)
+                if length <= 0 or npg != -(-length // ps):
+                    raise ValueError(
+                        f"chunk of {length} tokens needs "
+                        f"{-(-max(length, 1) // ps)} pages, got {npg}")
+                bt[i, b0:b0 + npg] = slots
+                # stored K is roped at chunk-local positions p*ps + off;
+                # the layout position is (b0 + p)*ps + off, so the
+                # per-page rotation delta is the constant b0*ps
+                delta[i, b0:b0 + npg] = b0 * ps
+                valid[i, b0 + npg - 1] = length - (npg - 1) * ps
+                b0 += npg
+            bt[i, b0:b0 + MB] = lease.block_table[i]
+        valid[bt < 0] = 0                  # padding columns attend nothing
+        lease.block_table = bt
+        lease.lengths = np.asarray([n * ps for n in n_blocks], np.int32)
+        lease.page_delta = delta
+        lease.page_valid = valid
+        lease.spliced_pages = total
+        lease.max_len = lead * ps + lease.max_len
+        self._record("kv.splice", lease.batch, lease.max_len,
+                     total * self.paged_page_nbytes(), lease.tenant,
+                     lease_id=lease.lease_id, pages=total,
+                     length=int(lease.lengths.max(initial=0)))
+        return total
+
+    def release_paged(self, lease: "PagedCacheLease") -> int:
+        """Return the lease's **owned** slab pages to the free list and
+        release its pool bytes; returns bytes freed.  Paged leases are
+        per request batch — no recycling bucket (block tables are cheap
+        to rebuild; the slab itself stays allocated).  Spliced chunk-KV
+        pages in the block table are NOT owned: they belong to the
+        ``ChunkKVCache``'s residency and go back to *warm* residency
+        (the splicer unpins them), never to the slab free list here —
+        freeing them would alias live chunk pages under future leases."""
+        slab = self._require_slab()
+        slab.free.extend(int(s) for s in lease.owned_slots)
+        pages = len(lease.owned_slots)
+        lease.owned_slots = ()
         lease.block_table = np.full_like(lease.block_table, -1)
         self._record("kv.release", lease.batch, lease.max_len,
                      lease.nbytes, lease.tenant, lease_id=lease.lease_id,
@@ -365,7 +473,27 @@ class PagedCacheLease:
     page_lease: Optional[PageLease] = None
     tenant: str = "shared"
     lease_id: int = -1                 # globally unique (trace correlation)
+    # slab slots this lease allocated (and will free): spliced chunk-KV
+    # pages appear in block_table but never here — their ownership stays
+    # with the ChunkKVCache residency
+    owned_slots: Tuple[int, ...] = ()
+    # splice metadata (None until splice_paged ran): per-block RoPE
+    # rotation offset and live-token count for serve_step_paged_spliced
+    page_delta: Optional[np.ndarray] = None
+    page_valid: Optional[np.ndarray] = None
+    spliced_pages: int = 0
 
     def device_tables(self) -> Tuple[jax.Array, jax.Array]:
         """(block_table, lengths) as device arrays for the kernel."""
         return jnp.asarray(self.block_table), jnp.asarray(self.lengths)
+
+    def device_splice_tables(self) -> Tuple[jax.Array, jax.Array,
+                                            jax.Array, jax.Array]:
+        """(block_table, lengths, page_delta, page_valid) as device
+        arrays — the ``serve_step_paged_spliced`` operands.  Requires a
+        prior ``splice_paged`` (which materializes delta/valid)."""
+        if self.page_delta is None or self.page_valid is None:
+            raise RuntimeError("lease has no splice tables: call "
+                               "KVCacheManager.splice_paged first")
+        return (jnp.asarray(self.block_table), jnp.asarray(self.lengths),
+                jnp.asarray(self.page_delta), jnp.asarray(self.page_valid))

@@ -227,6 +227,24 @@ class TeleRAGPolicy(RetrievalPolicy):
         # rejected cluster must not leak a hotness entry
         engine.cache.on_fetched(
             [c for c in plan.fetch if engine.buffer.is_resident(c)])
+        # chunk-KV lookahead: land the predicted clusters' precomputed
+        # chunk pages H2D during the same generation window, so the next
+        # round's splice hits warm residency instead of re-prefilling.
+        # Cold (unpinned) loads: a demoted ticket never reaches this
+        # call, and pool pressure can evict them again (the engine spill
+        # chain protects only pinned chunks).
+        chunk = getattr(engine, "chunk_kv", None)
+        if chunk is not None and engine.cfg.chunk_kv_prefetch_pages > 0:
+            if plan.fetch:
+                clusters = list(plan.fetch) + list(plan.resident_hits)
+            elif plan.ranked is not None:
+                clusters = [int(c) for c in np.asarray(plan.ranked).ravel()[:8]]
+            else:
+                clusters = []
+            if clusters:
+                chunk.prefetch_clusters(
+                    clusters, tenant=ticket.tenant,
+                    budget_pages=engine.cfg.chunk_kv_prefetch_pages)
         return plan.bytes_planned, len(plan.fetch), ev
 
     def retrieve(self, engine, q_out, *, now=0.0, tenant="shared"):

@@ -90,6 +90,22 @@ def test_tl001_escapes_are_clean():
         assert _rules(src, only=("TL001",)) == []
 
 
+def test_tl001_constructed_object_escape_is_clean():
+    # the residency idiom: the lease is wrapped into an object that is
+    # stored on the owner — ownership transferred transitively
+    src = ("def f(self, pool, d):\n"
+           "    lease = pool.lease_bytes(100, 'chunk_kv')\n"
+           "    res = Residency(doc_id=d, lease=lease)\n"
+           "    self.resident[d] = res\n")
+    assert _rules(src, only=("TL001",)) == []
+    # but wrapping alone is not an escape: a dropped wrapper still leaks
+    src = ("def f(pool, d):\n"
+           "    lease = pool.lease_bytes(100, 'chunk_kv')\n"
+           "    res = Residency(doc_id=d, lease=lease)\n"
+           "    return 1\n")
+    assert _rules(src, only=("TL001",)) == ["TL001"]
+
+
 def test_tl001_discarded_acquire_fires():
     src = ("def f(buffer, m, cs):\n"
            "    buffer.pin_clusters(m, cs)\n")
@@ -479,6 +495,141 @@ def test_dense_lease_events_are_exempt_from_paged_discipline():
     rep = check_events(evs, drained=True, must_drain=("kv",))
     assert rep.ok, rep.summary()
     assert rep.stats["paged_leases"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Chunk-KV discipline: hand-corrupted splice / residency streams
+# ---------------------------------------------------------------------------
+
+
+def _spliced_lease_stream(lease_id=5, pages=6, max_len=24):
+    """A paged lease that splices two chunk pages ahead of its fresh
+    blocks (raising capacity to 32) and then appends past the ORIGINAL
+    max_len — legal only because the splice raised it."""
+    return [
+        {"kind": "kv.acquire", "t": 0.0, "replica": 0, "lease_id": lease_id,
+         "pages": pages, "max_len": max_len, "batch": 1, "nbytes": 1000},
+        {"kind": "kv.splice", "t": 0.05, "replica": 0, "lease_id": lease_id,
+         "pages": 2, "max_len": max_len + 8, "batch": 1, "nbytes": 0},
+        {"kind": "kv.append", "t": 0.1, "replica": 0, "lease_id": lease_id,
+         "pages": pages, "max_len": max_len + 8, "length": max_len + 3},
+        {"kind": "kv.release", "t": 0.9, "replica": 0, "lease_id": lease_id,
+         "pages": pages, "max_len": max_len + 8, "nbytes": 1000},
+    ]
+
+
+def test_spliced_lease_stream_is_clean_and_raises_capacity():
+    """The splice raises the lease ceiling: an append past the fresh
+    max_len but under the spliced capacity must NOT overflow."""
+    rep = check_events(_spliced_lease_stream(), drained=True,
+                       must_drain=("kv",))
+    assert rep.ok, rep.summary()
+    # without the splice the same append IS an overflow
+    evs = [e for e in _spliced_lease_stream() if e["kind"] != "kv.splice"]
+    assert check_events(evs).of(inv.KV_APPEND_OVERFLOW)
+
+
+def test_splice_outside_lease_window_is_caught():
+    # splice after the lease was released
+    evs = _spliced_lease_stream()
+    evs.append(dict(next(e for e in evs if e["kind"] == "kv.splice"),
+                    t=1.0))
+    rep = check_events(evs)
+    assert rep.of(inv.KV_SPLICE_OUT_OF_LEASE), rep.summary()
+
+    # splice against a lease id that never existed
+    evs = _spliced_lease_stream()
+    evs[1] = dict(evs[1], lease_id=99)
+    rep = check_events(evs)
+    assert rep.of(inv.KV_SPLICE_OUT_OF_LEASE), rep.summary()
+
+
+def test_kv_drop_without_parked_bucket_is_caught():
+    """kv.drop recycles a parked dense bucket's bytes; a drop with no
+    prior dense release is a recycle-pool accounting hole."""
+    rep = check_events([{"kind": "kv.drop", "t": 0.1, "replica": 0}])
+    assert rep.of(inv.KV_RECYCLE_MISMATCH), rep.summary()
+    # park (dense release, lease_id=-1) then drop is the legal order
+    evs = [
+        {"kind": "kv.acquire", "t": 0.0, "replica": 0, "lease_id": -1},
+        {"kind": "kv.release", "t": 0.1, "replica": 0, "lease_id": -1},
+        {"kind": "kv.drop", "t": 0.2, "replica": 0},
+    ]
+    rep = check_events(evs, drained=True, must_drain=("kv",))
+    assert rep.ok, rep.summary()
+
+
+def _chunk_stream(doc_id=7, pages=2):
+    """One clean chunk residency lifecycle: load -> pin -> unpin ->
+    evict, page-conserving."""
+    return [
+        {"kind": "chunk.load", "t": 0.0, "replica": 0, "doc_id": doc_id,
+         "pages": pages, "nbytes": 100, "pins": 0, "tenant": "shared"},
+        {"kind": "chunk.pin", "t": 0.1, "replica": 0, "doc_id": doc_id,
+         "pages": pages, "nbytes": 0, "pins": 1, "tenant": "shared"},
+        {"kind": "chunk.unpin", "t": 0.2, "replica": 0, "doc_id": doc_id,
+         "pages": pages, "nbytes": 0, "pins": 0, "tenant": "shared"},
+        {"kind": "chunk.evict", "t": 0.3, "replica": 0, "doc_id": doc_id,
+         "pages": pages, "nbytes": 100, "pins": 0, "tenant": "shared"},
+    ]
+
+
+def test_clean_chunk_stream_passes_and_counts_loads():
+    rep = check_events(_chunk_stream(), drained=True,
+                       must_drain=("chunk_kv",))
+    assert rep.ok, rep.summary()
+    assert rep.stats["chunk_loads"] == 1
+
+
+def test_chunk_pin_before_load_is_caught():
+    evs = [e for e in _chunk_stream() if e["kind"] != "chunk.load"]
+    rep = check_events(evs)
+    assert rep.of(inv.CHUNK_PIN_BEFORE_LOAD), rep.summary()
+
+
+def test_chunk_unpin_without_pin_is_caught():
+    # unpin with no pin outstanding (the pin never happened)
+    evs = [e for e in _chunk_stream() if e["kind"] != "chunk.pin"]
+    rep = check_events(evs)
+    assert rep.of(inv.CHUNK_UNPIN_WITHOUT_PIN), rep.summary()
+
+    # a second unpin after the refcount already hit zero
+    evs = _chunk_stream()
+    evs.insert(3, dict(evs[2], t=0.25))
+    rep = check_events(evs)
+    assert rep.of(inv.CHUNK_UNPIN_WITHOUT_PIN), rep.summary()
+
+
+def test_chunk_evict_while_pinned_is_caught():
+    evs = [e for e in _chunk_stream() if e["kind"] != "chunk.unpin"]
+    rep = check_events(evs)
+    assert rep.of(inv.CHUNK_EVICT_WHILE_PINNED), rep.summary()
+
+
+def test_chunk_page_conservation_violations_are_caught():
+    # double load without an intervening evict double-counts residency
+    evs = _chunk_stream()
+    evs.insert(1, dict(evs[0], t=0.05))
+    assert check_events(evs).of(inv.CHUNK_PAGE_CONSERVATION)
+
+    # evicting a chunk that was never loaded
+    evs = [dict(e, doc_id=99) for e in _chunk_stream()
+           if e["kind"] == "chunk.evict"]
+    assert check_events(evs).of(inv.CHUNK_PAGE_CONSERVATION)
+
+    # evicting fewer pages than were loaded leaks the difference
+    evs = _chunk_stream()
+    next(e for e in evs if e["kind"] == "chunk.evict")["pages"] = 1
+    assert check_events(evs).of(inv.CHUNK_PAGE_CONSERVATION)
+
+
+def test_warm_chunk_residency_at_drain_needs_opt_in():
+    """Un-evicted chunks are warm cache — legal at drain unless the
+    run declared chunk_kv must empty (e.g. after ChunkKVCache.drain)."""
+    evs = [e for e in _chunk_stream() if e["kind"] != "chunk.evict"]
+    rep = check_events(evs, drained=True, must_drain=("chunk_kv",))
+    assert rep.of(inv.HELD_AT_DRAIN), rep.summary()
+    assert check_events(evs, drained=True, must_drain=("kv",)).ok
 
 
 # ---------------------------------------------------------------------------

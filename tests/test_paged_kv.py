@@ -187,6 +187,21 @@ def test_env_validate_reports_divergence(monkeypatch):
     assert "TF_CPP_MIN_LOG_LEVEL" not in diffs
 
 
+def test_decode_microbench_pinned_fixture_still_validates():
+    """The committed schema fixture (tests/data) is the contract: the
+    regenerated JSON itself is untracked bench output (--report-dir /
+    CI artifact), so THIS is what pins the schema across PRs."""
+    import json
+    import os
+
+    from benchmarks.bench_decode_microbench import validate_report
+    path = os.path.join(os.path.dirname(__file__), "data",
+                        "decode_microbench_pinned.json")
+    with open(path) as f:
+        report = json.load(f)
+    validate_report(report)
+
+
 def test_decode_microbench_smoke_schema():
     """The microbench JSON must validate against its schema guard."""
     from benchmarks.bench_decode_microbench import run_smoke, validate_report

@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Offline chunk-KV builder CLI: prefill every datastore chunk once,
+page its per-layer K/V (chunk-local RoPE), and write one ``.npz``
+artifact the serving stack loads as a ``ChunkKVStore``.
+
+  python tools/build_chunk_kv.py --out experiments/chunk_kv.npz \
+      --docs 64 --page-size 4 --seed 3
+
+At serve time, pass the loaded store to ``DecodeRunner(...,
+chunk_store=ChunkKVStore.load(path))`` with ``EngineConfig(
+chunk_kv=True)``: retrieved documents' KV is then spliced into paged
+decode by block-table edit instead of being re-prefilled (TurboRAG
+reordered RoPE; see docs/ARCHITECTURE.md "life of a chunk").
+
+The chunk corpus is the repo's deterministic synthetic one (tokens are
+a pure function of ``(seed, doc_id)``), so rebuilding the artifact on
+any machine is byte-stable given the same arch/seed.  ``--clusters``
+optionally attaches a doc→IVF-cluster map (uniform assignment from the
+doc id, matching ``core.datastore``'s synthetic layout) so lookahead
+prefetch can resolve predicted clusters to chunk pages.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+if os.path.isdir(_SRC) and _SRC not in sys.path:
+    sys.path.insert(0, os.path.abspath(_SRC))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", required=True, help="output .npz path")
+    ap.add_argument("--arch", default="llama3-8b",
+                    help="arch name (reduced preset is used)")
+    ap.add_argument("--docs", type=int, default=64,
+                    help="build chunks for doc ids [0, N)")
+    ap.add_argument("--page-size", type=int, default=4,
+                    help="KV page size in tokens (must match the serve "
+                         "slab's page_size)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--min-len", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=24)
+    ap.add_argument("--clusters", type=int, default=0,
+                    help="attach doc->cluster map over this many IVF "
+                         "clusters (0 = unmapped)")
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.data.chunk_kv import build_chunk_kv
+    from repro.models import transformer as tf
+
+    cfg = get_arch(args.arch).reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(args.seed),
+                            dtype=jnp.float32)
+    cluster_of = ((lambda d: d % args.clusters) if args.clusters > 0
+                  else None)
+    store = build_chunk_kv(params, cfg, range(args.docs),
+                           page_size=args.page_size, seed=args.seed,
+                           min_len=args.min_len, max_len=args.max_len,
+                           cluster_of=cluster_of)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    store.save(args.out)
+    print(f"chunk-KV store: {len(store)} docs, {store.total_pages()} pages "
+          f"of {args.page_size} tokens -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
